@@ -1,0 +1,87 @@
+"""Paper §3.1 ablation: Adaptive Searching vs naive shared-LSB choices.
+
+For each AMS scheme (k in {2,3,4}) and weight distribution, compare the
+normalized weight MSE of:
+    lsb=0 forced | lsb=1 forced | RTN-majority | adaptive (paper, set_lsb)
+    | adaptive-requantize (ours)
+The paper's claim: adaptive <= any fixed choice; our requantize refinement
+is a further strict improvement.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SCHEMES, ams_quantize_dequantize, dequantize, quantize_rtn
+from repro.core.formats import code_to_value
+
+AMS = ["fp5.33-e2m3", "fp4.5-e2m2", "fp4.33-e2m2", "fp4.25-e2m2"]
+
+
+def forced_lsb_mse(w, scheme, bit):
+    codes, scale = quantize_rtn(w, scheme.base)
+    fc = (codes & ~jnp.int32(1)) | bit
+    wq = dequantize(fc, scheme.base, scale)
+    return float(jnp.mean((wq - w) ** 2))
+
+
+def majority_mse(w, scheme):
+    """Group majority vote of RTN LSBs (a plausible cheap heuristic)."""
+    k = scheme.k
+    codes, scale = quantize_rtn(w, scheme.base)
+    K, N = codes.shape
+    Kp = (K // k) * k
+    codes = codes[:Kp]
+    bits = (codes & 1).reshape(Kp // k, k, N)
+    maj = (bits.sum(axis=1) * 2 >= k).astype(jnp.int32)
+    maj_full = jnp.repeat(maj, k, axis=0)
+    fc = (codes & ~jnp.int32(1)) | maj_full
+    wq = dequantize(fc, scheme.base, scale)
+    return float(jnp.mean((wq - w[:Kp]) ** 2))
+
+
+def dists(seed=0):
+    rng = np.random.default_rng(seed)
+    K, N = 1536, 256
+    return {
+        "gaussian": rng.standard_normal((K, N)).astype(np.float32) * 0.02,
+        "laplace": rng.laplace(size=(K, N)).astype(np.float32) * 0.02,
+        "outlier": (rng.standard_normal((K, N)) *
+                    (1 + 10 * (rng.random((K, N)) < 0.01))).astype(np.float32) * 0.02,
+    }
+
+
+def run(out_lines=None):
+    rows = []
+    for dname, w_np in dists().items():
+        w = jnp.asarray(w_np)
+        for name in AMS:
+            s = SCHEMES[name]
+            K = (w.shape[0] // s.k) * s.k
+            wk = w[:K]
+            t0 = time.time()
+            m0 = forced_lsb_mse(wk, s, 0)
+            m1 = forced_lsb_mse(wk, s, 1)
+            mm = majority_mse(wk, s)
+            ma = float(jnp.mean((ams_quantize_dequantize(wk, s, "set_lsb") - wk) ** 2))
+            mr = float(jnp.mean((ams_quantize_dequantize(wk, s, "requantize") - wk) ** 2))
+            dt = time.time() - t0
+            assert ma <= min(m0, m1) + 1e-12, (name, dname)
+            assert mr <= ma + 1e-12
+            line = (f"adaptive_search/{dname}/{name},{1e6*dt:.0f},"
+                    f"lsb0={m0:.3e} lsb1={m1:.3e} majority={mm:.3e} "
+                    f"adaptive={ma:.3e} requantize={mr:.3e} "
+                    f"gain_vs_best_fixed={min(m0,m1)/ma:.3f}x "
+                    f"rq_extra={ma/mr:.3f}x")
+            print(line, flush=True)
+            if out_lines is not None:
+                out_lines.append(line)
+            rows.append((dname, name, m0, m1, mm, ma, mr))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,131 @@
+"""Paper Table 2 / Fig. 3 / Fig. 5 proxy: accuracy vs. quantization scheme.
+
+No pretrained checkpoints exist offline, so the paper's benchmark-accuracy
+claim is reproduced as: train a small LM on the synthetic corpus, then
+measure held-out cross-entropy with PTQ'd weights under every scheme the
+paper evaluates. The paper's claim maps to:
+
+    CE(fp16) ~= CE(fp6-e2m3) ~= CE(fp5.33) < CE(fp5) <= CE(fp4.5)
+      <= CE(fp4.33) <= CE(fp4.25) << CE(fp4-e2m1)
+
+plus weight-MSE per scheme (the quantity adaptive search optimizes).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import SCHEMES
+from repro.core.policy import QuantPolicy
+from repro.data import DataConfig, SyntheticLM
+from repro.models import forward_seq
+from repro.models.common import quantize_params
+
+EVAL_SCHEMES = [
+    ("fp16", None),
+    ("fp8", "set_lsb"),
+    ("fp6-e2m3", "set_lsb"),
+    ("fp6-e3m2", "set_lsb"),
+    ("fp5.33-e2m3", "set_lsb"),
+    ("fp5.33-e2m3+rq", "requantize"),
+    ("fp5-e2m2", "set_lsb"),
+    ("fp4.5-e2m2", "set_lsb"),
+    ("fp4.33-e2m2", "set_lsb"),
+    ("fp4.25-e2m2", "set_lsb"),
+    ("fp4.25-e2m2+rq", "requantize"),
+    ("fp4-e2m1", "set_lsb"),
+]
+
+
+def train_small_model(steps: int = 250, seed: int = 0):
+    """Train a tiny qwen2-family model on synthetic data; return params+cfg."""
+    from repro.launch.train import main as train_main
+    import tempfile, os
+
+    ckpt = tempfile.mkdtemp(prefix="bench_fmt_")
+    train_main([
+        "--arch", "qwen2-7b", "--reduced", "--steps", str(steps),
+        "--seq-len", "128", "--global-batch", "8", "--lr", "2e-3",
+        "--ckpt-dir", ckpt, "--ckpt-every", str(steps), "--log-every", "50",
+    ])
+    # reload
+    from repro.checkpoint import CheckpointManager
+    from repro.models import init_params
+    from repro.optim import init_state
+    cfg = get_config("qwen2-7b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    mgr = CheckpointManager(ckpt)
+    restored, _ = mgr.restore({"params": params,
+                               "opt": init_state(params)})
+    return jax.tree.map(jnp.asarray, restored["params"]), cfg
+
+
+def eval_ce(params, cfg, policy, n_batches: int = 4, seed: int = 777):
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                                  global_batch=8, seed=seed))
+    tot, cnt = 0.0, 0
+
+    @jax.jit
+    def ce(p, toks, tgts):
+        logits, _, _ = forward_seq(p, toks, cfg, policy=policy, remat=False,
+                                   dtype=jnp.float32)
+        ls = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(ls, tgts[..., None], axis=-1).mean()
+
+    for b in range(n_batches):
+        toks, tgts = data.batch(10_000 + b)
+        tot += float(ce(params, jnp.asarray(toks), jnp.asarray(tgts)))
+        cnt += 1
+    return tot / cnt
+
+
+def weight_mse(params, policy):
+    from repro.core import get_scheme, ams_quantize_dequantize
+    s = get_scheme(policy.scheme)
+    tot, n = 0.0, 0
+    w = params["layers"]["sub0"]["ffn"]["w_up"]["w"]
+    for l in range(w.shape[0]):
+        wl = w[l][: (w.shape[1] // s.k) * s.k]  # sharing needs K % k == 0
+        wq = ams_quantize_dequantize(wl, s, policy.strategy)
+        tot += float(jnp.sum((wq - wl) ** 2))
+        n += wl.size
+    return tot / n
+
+
+def run(out_lines=None, steps: int = 250):
+    params, cfg = train_small_model(steps)
+    base = None
+    rows = []
+    for label, strategy in EVAL_SCHEMES:
+        scheme = label.replace("+rq", "")
+        t0 = time.time()
+        if scheme == "fp16":
+            policy, qp = None, None
+            ce = eval_ce(params, cfg, None)
+            mse = 0.0
+        else:
+            qp = QuantPolicy(scheme=scheme, strategy=strategy, impl="ref",
+                             min_elements=1 << 10)
+            qparams = quantize_params(params, qp)
+            ce = eval_ce(qparams, cfg, qp)
+            mse = weight_mse(params, qp)
+        dt = time.time() - t0
+        if base is None:
+            base = ce
+        bits = SCHEMES[scheme].effective_bits if scheme != "fp16" else 16.0
+        rows.append((label, bits, ce, ce - base, mse, dt))
+        line = (f"formats_accuracy/{label},{1e6*dt:.0f},"
+                f"bits={bits:.3f} ce={ce:.4f} delta={ce-base:+.4f} mse={mse:.3e}")
+        print(line, flush=True)
+        if out_lines is not None:
+            out_lines.append(line)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (and tees a copy into
+experiments/bench_results.txt):
+
+    Table 2 / Fig.3 / Fig.5  -> bench_formats_accuracy (CE + weight-MSE proxy)
+    §3.1 Adaptive Searching  -> bench_adaptive_search
+    Table 3 / Fig.6          -> bench_kernel_speedup (analytic Table-3 model
+                                + CPU wall-clock plumbing check)
+    §Roofline summary        -> bench_roofline (reads experiments/dryrun)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def bench_roofline(out_lines):
+    """Summarize dry-run roofline terms if dry-run records exist."""
+    try:
+        from repro.analysis.roofline import analyze, load_records
+    except Exception as e:  # pragma: no cover
+        print(f"roofline/skip,0,import_error={e!r}")
+        return
+    recs = load_records("experiments/dryrun", "pod256")
+    if not recs:
+        line = "roofline/skip,0,no dry-run records (run repro.launch.dryrun)"
+        print(line)
+        out_lines.append(line)
+        return
+    for r in recs:
+        a = analyze(r)
+        line = (f"roofline/{r['arch']}/{r['shape']},0,"
+                f"dom={a['dominant']} compute_s={a['compute_s']:.4g} "
+                f"memory_s={a['memory_s']:.4g} "
+                f"collective_s={a['collective_s']:.4g} "
+                f"useful={a['useful_flops_ratio']} "
+                f"roofline_frac={a['roofline_fraction']}")
+        print(line, flush=True)
+        out_lines.append(line)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer training steps for the accuracy bench")
+    ap.add_argument("--skip-accuracy", action="store_true")
+    args = ap.parse_args()
+
+    out_lines = []
+    t0 = time.time()
+
+    from benchmarks import bench_adaptive_search, bench_kernel_speedup
+
+    print("# === adaptive search ablation (paper §3.1) ===", flush=True)
+    bench_adaptive_search.run(out_lines)
+
+    print("# === kernel speedup (paper Table 3) ===", flush=True)
+    bench_kernel_speedup.run(out_lines)
+
+    if not args.skip_accuracy:
+        print("# === format accuracy sweep (paper Table 2 / Fig.3/5) ===",
+              flush=True)
+        from benchmarks import bench_formats_accuracy
+        bench_formats_accuracy.run(out_lines,
+                                   steps=80 if args.quick else 250)
+
+    print("# === roofline summary (§Roofline) ===", flush=True)
+    bench_roofline(out_lines)
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.txt", "w") as f:
+        f.write("\n".join(out_lines) + "\n")
+    print(f"# done in {time.time()-t0:.0f}s "
+          f"({len(out_lines)} rows -> experiments/bench_results.txt)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Example: compile one (arch x shape) cell on the 2-pod 512-chip mesh and
+print its memory/roofline summary. This is the per-cell entry point the full
+sweep (python -m repro.launch.dryrun --mesh both) iterates.
+
+Run:  PYTHONPATH=src python examples/multi_pod_dryrun.py \
+          [--arch qwen2-7b] [--shape decode_32k]
+"""
+
+# NOTE: must run as its own process; dryrun pins 512 host devices pre-import.
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--shape", default="decode_32k")
+    args = ap.parse_args()
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", args.arch, "--shape", args.shape, "--mesh", "multi"]))

@@ -1,0 +1,37 @@
+"""Quickstart: AMS-Quant in 30 lines.
+
+Quantize a weight matrix to FP5.33 (e2m3, 3 weights sharing each mantissa
+LSB), inspect the storage saving, and run the packed matmul three ways:
+reference, K-blocked fused, and the Pallas TPU kernel (interpret mode on
+CPU). Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_scheme, quantize_linear
+from repro.core.qlinear import apply as qapply, dequantize_weight
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(0)
+K, N, B = 1536, 512, 4
+w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32) * 0.02)
+x = jnp.asarray(rng.standard_normal((B, K)).astype(np.float32))
+
+scheme = get_scheme("fp5.33-e2m3")
+print(f"scheme: {scheme.name}  effective bits/weight: {scheme.effective_bits:.3f}")
+
+q = quantize_linear(w, scheme, strategy="set_lsb")
+lay = q.packed.layout
+print(f"container: {lay.container}  packed bytes: {lay.packed_bytes(K, N):,} "
+      f"(fp16 would be {2*K*N:,}; {2*K*N/lay.packed_bytes(K,N):.2f}x smaller)")
+
+wq = dequantize_weight(q, jnp.float32)
+print(f"quantization MSE: {float(jnp.mean((wq - w)**2)):.3e}")
+
+y_ref = qapply(q, x, impl="ref")
+y_fused = qapply(q, x, impl="fused_ref")
+y_pallas = ops.ams_matmul(x, q.packed, interpret=True)
+print("ref vs fused   max err:", float(jnp.max(jnp.abs(y_ref - y_fused))))
+print("ref vs pallas  max err:", float(jnp.max(jnp.abs(y_ref - y_pallas))),
+      "(bf16 activation rounding in the MXU path)")

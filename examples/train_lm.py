@@ -1,0 +1,28 @@
+"""End-to-end driver: train a ~10M-param qwen2-family model for a few hundred
+steps on the synthetic corpus, with checkpointing + fault tolerance.
+
+This is the (b)-deliverable end-to-end training example; the same driver
+runs production meshes with --mesh single/multi on real pods.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_quickstart_ckpt")
+    args = ap.parse_args()
+    losses = train_main([
+        "--arch", "qwen2-7b", "--reduced",
+        "--steps", str(args.steps),
+        "--seq-len", "128", "--global-batch", "8",
+        "--lr", "2e-3",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+        "--log-every", "20",
+    ])
+    assert losses[-1] < losses[0] - 1.0, "training did not learn"
+    print("OK: loss improved", losses[0], "->", losses[-1])

@@ -1,0 +1,81 @@
+"""Post-SPMD HLO text analysis: collective operand bytes + op histograms.
+
+cost_analysis() has FLOPs/bytes but NOT collective traffic; we parse the
+optimized HLO module text (one SPMD partition) and sum the *output* shape
+bytes of every collective op, bucketed by kind. Sizes are therefore
+per-device, matching cost_analysis granularity.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+)
+
+# e.g.  %all-gather.3 = bf16[4,2048]{1,0} all-gather(%param.1), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+([a-z0-9\-]+)\(")
+_TUPLE_RE = re.compile(
+    r"=\s*\(\s*(.*?)\)\s+([a-z0-9\-]+)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output bytes of each collective kind in the optimized HLO."""
+    out: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        stripped = line.lstrip("% ")
+        # find op kind by looking for " <kind>(" with a known collective
+        m = _OP_RE.search(line)
+        kind = None
+        size = 0
+        if m and m.group(3) in COLLECTIVE_KINDS:
+            kind = m.group(3)
+            size = _shape_bytes(m.group(1), m.group(2))
+        else:
+            mt = _TUPLE_RE.search(line)
+            if mt and mt.group(2) in COLLECTIVE_KINDS:
+                kind = mt.group(2)
+                size = sum(_shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(mt.group(1)))
+        if kind:
+            kind = kind.replace("-start", "")
+            out[kind] += size
+            out["total"] += size
+    return dict(out)
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 25) -> Dict[str, int]:
+    """Count op kinds (fusion/dot/collective/...) — remat & redundancy hints."""
+    hist: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m:
+            hist[m.group(3)] += 1
+        else:
+            mt = _TUPLE_RE.search(line)
+            if mt:
+                hist[mt.group(2)] += 1
+    items = sorted(hist.items(), key=lambda kv: -kv[1])[:top]
+    return dict(items)

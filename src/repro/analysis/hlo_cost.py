@@ -1,0 +1,406 @@
+"""Trip-count-aware cost model over optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE — our
+steps scan over layer groups (and microbatches), so its numbers are per-
+iteration, not per-step. This module parses the HLO module text into its
+computation regions, recovers each while loop's trip count from its
+condition region (lax.scan lowers to `compare(iv, constant(N)), direction=LT`
+— verified by test), and accumulates:
+
+  * flops               — dots (2*M*N*K from operand shapes + contracting
+                          dims), convolutions, and elementwise ops (1 flop /
+                          output element), multiplied through loop nests;
+  * hbm_bytes           — an HBM-traffic model: for every top-level fusion /
+                          dot / copy / collective, operands + outputs
+                          (fusion-internal temporaries stay in registers /
+                          don't round-trip HBM);
+  * collective_bytes    — per kind, trip-multiplied.
+
+All values are per-device (the HLO module is one SPMD partition).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\((.*)$")
+_CALLED_ONE = re.compile(r"(?:calls|body|condition|to_apply)=%([\w\.\-]+)")
+_CALLED_SET = re.compile(r"(?:calls|branch_computations)=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-gather-start", "all-reduce-start",
+               "reduce-scatter-start", "collective-permute-start"}
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "floor", "ceil", "round-nearest-afz", "select", "compare", "and", "or",
+    "xor", "not", "clamp", "convert", "sine", "cosine", "logistic",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "exponential-minus-one", "log-plus-one", "cbrt", "erf", "remainder",
+}
+
+
+def _parse_shapes(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt in _DTYPE_BYTES:
+            shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+            out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    tot = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        tot += n * _DTYPE_BYTES[dt]
+    return tot
+
+
+def _nelems(shapes) -> int:
+    tot = 0
+    for _, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        tot += n
+    return tot
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    out_shapes: list
+    operands: List[str]
+    called: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+    root: Optional[str] = None
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        hdr = _COMP_HDR.match(s)
+        if hdr and s.endswith("{") and ") -> " in s and "=" not in s.split("(")[0]:
+            cur = Computation(hdr.group(1), {}, [])
+            comps[cur.name] = cur
+            if s.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, outtype, kind, rest = m.groups()
+        out_shapes = _parse_shapes(outtype)
+        # operands: %refs before the closing paren of the op call
+        arg_str = rest.split(")")[0]
+        operands = re.findall(r"%([\w\.\-]+)", arg_str)
+        called = []
+        for cm in _CALLED_ONE.finditer(rest):
+            called.append(cm.group(1))
+        for cm in _CALLED_SET.finditer(rest):
+            called.extend(x.strip().lstrip("%")
+                          for x in cm.group(1).split(",") if x.strip())
+        cur.ops[name] = Op(name, kind, out_shapes, operands, called, rest)
+        cur.order.append(name)
+        if s.startswith("ROOT"):
+            cur.root = name
+    return comps, entry
+
+
+_SLICING = {"dynamic-slice", "gather", "slice"}
+
+
+def _fusion_operand_bytes(op: Op, idx: int, oname: str, sym, comps) -> float:
+    """HBM bytes read for one fusion operand.
+
+    A fusion that dynamic-slices a big buffer (the scan-over-layers stacked
+    weight pattern) only reads the slice, not the whole buffer — charge the
+    consumers' output size instead of the full operand in that case."""
+    full = _nbytes(sym.get(oname, []))
+    inner = comps.get(op.called[0]) if op.called else None
+    if inner is None:
+        return full
+    # find parameter(idx) in the fused computation
+    pname = None
+    for n in inner.order:
+        o = inner.ops[n]
+        if o.kind == "parameter" and o.attrs.strip().startswith(f"{idx})"):
+            pname = n
+            break
+    if pname is None:
+        return full
+    consumers = [inner.ops[n] for n in inner.order
+                 if pname in inner.ops[n].operands]
+    if consumers and all(c.kind in _SLICING for c in consumers):
+        sliced = sum(_nbytes(c.out_shapes) for c in consumers)
+        return min(full, sliced)
+    return full
+
+
+def _inplace_update_bytes(op: Op, comps) -> Optional[Tuple[float, float]]:
+    """If the fusion contains dynamic-update-slice(param, update, ...) on a
+    buffer parameter (the scan-ys / KV-cache write pattern — possibly wrapped
+    in dtype converts by the CPU backend), return (update_bytes,
+    update_elems); else None. Such fusions touch only the updated slice in
+    HBM per iteration, whatever XLA's convert games say."""
+    inner = comps.get(op.called[0]) if op.called else None
+    if inner is None:
+        return None
+    for n in inner.order:
+        o = inner.ops[n]
+        if o.kind != "dynamic-update-slice" or len(o.operands) < 2:
+            continue
+        tgt = inner.ops.get(o.operands[0])
+        upd = inner.ops.get(o.operands[1])
+        if upd is None or tgt is None:
+            continue
+        # target must trace back to a parameter (possibly via convert/bitcast)
+        seen = 0
+        while tgt is not None and tgt.kind in ("convert", "bitcast", "copy") and seen < 4:
+            tgt = inner.ops.get(tgt.operands[0]) if tgt.operands else None
+            seen += 1
+        if tgt is not None and tgt.kind == "parameter":
+            return float(_nbytes(upd.out_shapes)), float(_nelems(upd.out_shapes))
+    return None
+
+
+def _dot_flops(op: Op, sym: Dict[str, list]) -> float:
+    lhs = sym.get(op.operands[0]) if op.operands else None
+    rhs = sym.get(op.operands[1]) if len(op.operands) > 1 else None
+    if not lhs or not rhs:
+        return 0.0
+    lhs_dims = lhs[0][1]
+    rhs_dims = rhs[0][1]
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    mb = re.search(r"lhs_batch_dims=\{([0-9,]*)\}", op.attrs)
+    contract = [int(x) for x in mc.group(1).split(",")] if mc and mc.group(1) else []
+    batch = [int(x) for x in mb.group(1).split(",")] if mb and mb.group(1) else []
+    k = 1
+    for d in contract:
+        k *= lhs_dims[d] if d < len(lhs_dims) else 1
+    out_elems = _nelems(op.out_shapes)
+    return 2.0 * out_elems * k
+
+
+def is_condition(comp: Computation) -> bool:
+    """Scan/while condition regions root in EXACTLY one scalar pred."""
+    root_name = comp.root or (comp.order[-1] if comp.order else None)
+    if root_name is None:
+        return False
+    root = comp.ops[root_name]
+    return root.out_shapes == [("pred", ())]
+
+
+def trip_count(cond: Computation) -> int:
+    """lax.scan condition is `iv < N`; N is the only (max) integer constant
+    in the region (possibly feeding a compare wrapped in a fusion)."""
+    best = 1
+    for name in cond.order:
+        op = cond.ops[name]
+        if op.kind == "constant":
+            m = re.match(r"\s*(\d+)\)", op.attrs)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))      # raw output bytes
+    traffic: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))      # ring-model link bytes
+
+    def scaled(self, k: float) -> "Cost":
+        c = Cost(self.flops * k, self.hbm_bytes * k)
+        for kk, v in self.collectives.items():
+            c.collectives[kk] = v * k
+        for kk, v in self.traffic.items():
+            c.traffic[kk] = v * k
+        return c
+
+    def add(self, o: "Cost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        for k, v in o.collectives.items():
+            self.collectives[k] += v
+        for k, v in o.traffic.items():
+            self.traffic[k] += v
+
+
+def _group_size(attrs: str) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _ring_traffic(kind: str, out_bytes: float, g: int) -> float:
+    """Per-device link bytes under a ring model, from op OUTPUT bytes."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return out_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * out_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return out_bytes * (g - 1)          # output is the shard
+    if kind == "all-to-all":
+        return out_bytes * (g - 1) / g
+    if kind == "collective-permute":
+        return out_bytes
+    return out_bytes
+
+
+# constant extraction needs the raw line; patch: store full line in attrs.
+def _flops_only(comp: Computation, comps, memo) -> Cost:
+    return _cost_of(comp, comps, memo, top_level=False)
+
+
+def _cost_of(comp: Computation, comps: Dict[str, Computation], memo,
+             top_level: bool) -> Cost:
+    key = (comp.name, top_level)
+    if key in memo:
+        return memo[key]
+    total = Cost()
+    sym = {name: comp.ops[name].out_shapes for name in comp.order}
+    for name in comp.order:
+        op = comp.ops[name]
+        k = op.kind
+        if k == "while":
+            tc = 1
+            body_c = Cost()
+            cands = [comps[c] for c in op.called if c in comps]
+            conds = [c for c in cands if is_condition(c)]
+            bodies = [c for c in cands if not is_condition(c)]
+            if conds:
+                tc = max(trip_count(c) for c in conds)
+            for b in bodies:
+                body_c.add(_cost_of(b, comps, memo, top_level=True))
+            total.add(body_c.scaled(tc))
+        elif k in ("fusion", "call", "custom-call", "map", "reduce-window",
+                   "conditional", "sort", "scatter"):
+            inner = Cost()
+            for cn in op.called:
+                if cn in comps:
+                    inner.add(_cost_of(comps[cn], comps, memo,
+                                       top_level=False))
+            upd = _inplace_update_bytes(op, comps)
+            if upd is not None:
+                # in-place cache/ys write: only the updated slice matters
+                # (XLA's full-buffer convert wrappers are buffer-dtype
+                # bookkeeping, not streamed math)
+                total.flops += min(inner.flops, 4 * upd[1])
+            else:
+                total.flops += inner.flops
+            for kk, v in inner.collectives.items():
+                total.collectives[kk] += v
+            if top_level:
+                opnd_bytes = sum(
+                    _fusion_operand_bytes(op, i, o, sym, comps)
+                    for i, o in enumerate(op.operands))
+                out_bytes = _nbytes(op.out_shapes)
+                if upd is not None:
+                    out_bytes = upd[0]
+                    opnd_bytes = min(opnd_bytes, upd[0])
+                total.hbm_bytes += opnd_bytes + out_bytes
+        elif k == "dot":
+            total.flops += _dot_flops(op, sym)
+            if top_level:
+                opnd_bytes = sum(_nbytes(sym.get(o, [])) for o in op.operands)
+                total.hbm_bytes += opnd_bytes + _nbytes(op.out_shapes)
+        elif k == "convolution":
+            # rough: 2 * out_elems * (kernel elems); kernel = operand 1
+            kb = sym.get(op.operands[1], []) if len(op.operands) > 1 else []
+            total.flops += 2.0 * _nelems(op.out_shapes) * max(1, _nelems(kb))
+            if top_level:
+                total.hbm_bytes += sum(_nbytes(sym.get(o, []))
+                                       for o in op.operands) + _nbytes(op.out_shapes)
+        elif k in COLLECTIVES:
+            kind = k.replace("-start", "")
+            b = _nbytes(op.out_shapes)
+            g = _group_size(op.attrs)
+            total.collectives[kind] += b
+            total.collectives["total"] += b
+            t = _ring_traffic(kind, b, g)
+            total.traffic[kind] += t
+            total.traffic["total"] += t
+            if top_level:
+                total.hbm_bytes += b
+        elif k in ELEMENTWISE or k in ("reduce", "broadcast", "iota",
+                                       "transpose", "reshape", "concatenate",
+                                       "slice", "dynamic-slice",
+                                       "dynamic-update-slice", "pad", "gather",
+                                       "reverse", "rng", "copy"):
+            if k in ELEMENTWISE or k == "reduce":
+                total.flops += _nelems(op.out_shapes)
+            if top_level and k in _SLICING:
+                total.hbm_bytes += 2 * _nbytes(op.out_shapes)
+            elif top_level and k == "dynamic-update-slice":
+                upd = (_nbytes(sym.get(op.operands[1], []))
+                       if len(op.operands) > 1 else _nbytes(op.out_shapes))
+                total.hbm_bytes += 2 * upd
+            elif top_level and k in ("copy", "transpose", "reshape",
+                                     "concatenate", "broadcast", "pad",
+                                     "reduce"):
+                opnd_bytes = sum(_nbytes(sym.get(o, [])) for o in op.operands)
+                total.hbm_bytes += opnd_bytes + _nbytes(op.out_shapes)
+            elif top_level and k in ELEMENTWISE:
+                opnd_bytes = sum(_nbytes(sym.get(o, [])) for o in op.operands)
+                total.hbm_bytes += opnd_bytes + _nbytes(op.out_shapes)
+    memo[key] = total
+    return total
+
+
+def module_cost(hlo_text: str) -> Cost:
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda c: len(comps[c].order)) if comps else None
+    memo: dict = {}
+    if entry is None:
+        return Cost()
+    return _cost_of(comps[entry], comps, memo, top_level=True)

@@ -1,0 +1,252 @@
+"""Roofline analysis over dry-run records (§Roofline deliverable).
+
+Per (arch x shape x mesh) cell, from the trip-count-aware parsed HLO costs
+(analysis/hlo_cost.py — XLA's cost_analysis counts loop bodies once, ours
+multiplies through the loop nest):
+
+    compute term    = parsed_flops   / PEAK_FLOPS          (s)
+    memory term     = parsed_hbm     / HBM_BW              (s)
+    collective term = parsed_traffic / (LINKS * LINK_BW)   (s)
+
+plus MODEL_FLOPS = 6*N*D (train) / 2*N_active*D (inference) per device and
+the usefulness ratio MODEL_FLOPS / parsed_flops.
+
+Hardware: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(we model 3 usable link-pairs per chip on a 2D torus slice -> the collective
+term uses 1 link of 50 GB/s as the conservative per-device serialization).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+# --------------------------------------------------------------------------
+# Analytic parameter counts / MODEL_FLOPS
+# --------------------------------------------------------------------------
+def param_count(cfg) -> Dict[str, float]:
+    """(total, active) parameter counts of the true (unpadded) architecture."""
+    D, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    emb = V * D
+    head = D * V
+    per_layer = 0.0
+    per_layer_active = 0.0
+
+    def attn_params():
+        if cfg.attention == "mla":
+            H = cfg.num_heads
+            p = (D * cfg.q_lora_rank
+                 + cfg.q_lora_rank * H * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+                 + D * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                 + cfg.kv_lora_rank * H * cfg.qk_nope_dim
+                 + cfg.kv_lora_rank * H * cfg.v_head_dim
+                 + H * cfg.v_head_dim * D)
+            return p
+        if cfg.attention == "none":
+            return 0
+        hd = cfg.head_dim
+        return (D * cfg.num_heads * hd + 2 * D * cfg.num_kv_heads * hd
+                + cfg.num_heads * hd * D)
+
+    def ffn_params(width):
+        mult = 3 if cfg.ffn_activation.endswith("_glu") else 2
+        return mult * D * width
+
+    if cfg.family == "ssm":
+        di, n = cfg.d_inner, cfg.ssm_state
+        dtr = cfg.dt_rank or D // 16
+        per_layer = (D * 2 * di + cfg.ssm_conv * di + di * (dtr + 2 * n)
+                     + dtr * di + di * n + di + di * D)
+        per_layer_active = per_layer
+        total = emb + head + L * per_layer
+        active = total
+        return {"total": total, "active": active}
+
+    if cfg.family == "hybrid":
+        W = cfg.lru_width
+        rec = D * 2 * W + 4 * W + 2 * W * W + W * D + ffn_params(cfg.d_ff)
+        att = attn_params() + ffn_params(cfg.d_ff)
+        pat = cfg.block_pattern
+        counts = {"rec": rec, "attn": att}
+        tot = sum(counts[k] for k in
+                  [pat[i % len(pat)] for i in range(L)])
+        total = emb + head + tot
+        return {"total": total, "active": total}
+
+    att = attn_params()
+    if cfg.num_experts:
+        experts = cfg.num_experts * ffn_params(cfg.d_ff)
+        shared = ffn_params(cfg.moe_shared_expert_ff) if cfg.moe_shared_expert_ff else 0
+        router = D * cfg.num_experts
+        per_layer = att + experts + shared + router
+        per_layer_active = (att + cfg.experts_per_token * ffn_params(cfg.d_ff)
+                            + shared + router)
+    else:
+        per_layer = att + ffn_params(cfg.d_ff)
+        per_layer_active = per_layer
+    total = emb + head + L * per_layer
+    active = emb + head + L * per_layer_active
+    return {"total": total, "active": active}
+
+
+def model_flops_per_device(cfg, shape_mode: str, seq: int, batch: int,
+                           devices: int) -> float:
+    """Text-book MODEL_FLOPS (6ND train / 2ND forward), per device."""
+    pc = param_count(cfg)
+    N = pc["active"]
+    if shape_mode == "train":
+        tokens = seq * batch
+        return 6.0 * N * tokens / devices
+    if shape_mode == "prefill":
+        tokens = seq * batch
+        return 2.0 * N * tokens / devices
+    # decode: one token per sequence + attention over the cache
+    tokens = batch
+    return 2.0 * N * tokens / devices
+
+
+# --------------------------------------------------------------------------
+# Roofline terms
+# --------------------------------------------------------------------------
+def weight_bytes_per_device(cfg, quant: str, devices: int, mode: str) -> float:
+    """Per-device weight bytes: packed bits for quantized serving, bf16 for
+    train (sharded over the whole mesh via TP x FSDP for train, TP for serve)."""
+    pc = param_count(cfg)
+    if quant not in ("bf16", "fp16") and mode != "train":
+        from repro.core.formats import SCHEMES
+        bits = SCHEMES[quant].effective_bits if quant in SCHEMES else 16
+        tp = 16  # serve shards weights over the model axis only
+        return pc["total"] * bits / 8 / tp
+    share = devices if mode == "train" else 16
+    return pc["total"] * 2.0 / share
+
+
+def cache_bytes_per_device(cfg, seq: int, batch: int, devices: int) -> float:
+    """Decode KV/state cache bytes per device (bf16)."""
+    B_loc = max(1, batch // min(16, batch))  # batch over data axis
+    dims_kv = cfg.num_kv_heads * cfg.head_dim
+    if cfg.attention == "mla":
+        dims_kv = cfg.kv_lora_rank + cfg.qk_rope_dim
+    if cfg.family == "ssm":
+        return cfg.num_layers * B_loc * cfg.d_inner * (cfg.ssm_state + cfg.ssm_conv) * 4 / 16
+    S_eff = seq / 16  # sequence-sharded over model axis
+    if cfg.sliding_window:
+        n_attn = sum(1 for i in range(cfg.num_layers)
+                     if cfg.block_pattern and cfg.block_pattern[i % len(cfg.block_pattern)] == "attn")
+        return n_attn * B_loc * min(cfg.sliding_window, seq) / 16 * dims_kv * 2 * 2
+    mult = 1 if cfg.attention == "mla" else 2  # MLA: one compressed stream
+    return cfg.num_layers * B_loc * S_eff * dims_kv * 2 * mult
+
+
+def analytic_memory_floor(cfg, quant: str, mode: str, seq: int, batch: int,
+                          devices: int) -> float:
+    """Lower-bound HBM traffic/step/device on the TPU target: every weight
+    byte once (packed), the decode cache once, plus O(activations)."""
+    w = weight_bytes_per_device(cfg, quant, devices, mode)
+    # activation flow: ~4 full-width tensors r/w per layer per token
+    act = batch * seq / devices * cfg.d_model * 2 * 4 * max(1, cfg.num_layers)
+    if mode == "train":
+        return 3 * w + 3 * act  # fwd+bwd+remat weight reads, act r/w
+    if mode == "prefill":
+        return w + act
+    return w + cache_bytes_per_device(cfg, seq, batch, devices) + batch / devices * cfg.d_model * 2
+
+
+def analyze(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    from repro.launch.specs import SHAPES
+    seq, batch, mode = SHAPES[rec["shape"]]
+    devices = rec["devices"]
+    flops = rec.get("parsed_flops", 0.0)
+    hbm = rec.get("parsed_hbm_bytes", 0.0)
+    traffic = rec.get("parsed_traffic", {}).get("total", 0.0)
+
+    t_comp = flops / PEAK_FLOPS
+    t_mem = hbm / HBM_BW
+    t_coll = traffic / LINK_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(cfg, mode, seq, batch, devices)
+    bound = max(terms.values())
+    ideal = mf / PEAK_FLOPS
+    # analytic TPU-target floor: the CPU-compiled artifact inserts dtype
+    # converts/copies a TPU compiler fuses away; this is the memory term the
+    # same program lower-bounds to on the target (packed weights + cache).
+    floor_b = analytic_memory_floor(cfg, rec.get("quant", "bf16"), mode, seq,
+                                    batch, devices)
+    t_mem_floor = floor_b / HBM_BW
+    bound_floor = max(t_comp, t_mem_floor, t_coll)
+    return {
+        **{k: round(v, 6) for k, v in terms.items()},
+        "memory_floor_s": round(t_mem_floor, 6),
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": round(mf / flops, 4) if flops else None,
+        "roofline_fraction": round(ideal / bound, 4) if bound else None,
+        "roofline_fraction_target": round(ideal / bound_floor, 4) if bound_floor else None,
+        "step_time_bound_s": round(bound, 6),
+    }
+
+
+def load_records(out_dir: str, mesh: str = "pod256",
+                 tag: Optional[str] = None) -> List[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, mesh, "*.json"))):
+        base = os.path.basename(p)[:-5]
+        has_tag = "__" in base.split("__", 2)[-1] if base.count("__") >= 2 else False
+        if tag is None and base.count("__") >= 2:
+            continue
+        if tag is not None and not base.endswith(f"__{tag}"):
+            continue
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: List[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'dom':10s} "
+           f"{'compute(s)':>11s} {'memory(s)':>11s} {'mem_floor':>10s} "
+           f"{'collect(s)':>11s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'tgt%':>6s} {'peakGiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        a = analyze(r)
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {a['dominant']:10s} "
+            f"{a['compute_s']:11.4g} {a['memory_s']:11.4g} "
+            f"{a['memory_floor_s']:10.4g} {a['collective_s']:11.4g} "
+            f"{(a['useful_flops_ratio'] or 0):7.3f} "
+            f"{100*(a['roofline_fraction'] or 0):7.2f} "
+            f"{100*(a['roofline_fraction_target'] or 0):6.1f} "
+            f"{r['memory']['peak_bytes']/2**30:8.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod256")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    recs = load_records(args.dir, args.mesh, args.tag)
+    print(table(recs))
+    if args.json_out:
+        out = [{**{k: r[k] for k in ("arch", "shape", "mesh", "quant")},
+                **analyze(r)} for r in recs]
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

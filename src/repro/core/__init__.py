@@ -1,0 +1,30 @@
+"""AMS-Quant core: formats, RTN, mantissa sharing, packing, quantized linear."""
+
+from .formats import (  # noqa: F401
+    AMSFormat,
+    FORMATS,
+    FPFormat,
+    SCHEMES,
+    code_to_value,
+    get_format,
+    get_scheme,
+)
+from .rtn import (  # noqa: F401
+    channel_scales,
+    dequantize,
+    quantize_dequantize,
+    quantize_rtn,
+)
+from .ams import (  # noqa: F401
+    ams_quantize,
+    ams_quantize_dequantize,
+    share_mantissa,
+    shared_lsb_bits,
+)
+from .packing import PackedWeight, PackLayout, make_layout, pack, unpack  # noqa: F401
+from .qlinear import (  # noqa: F401
+    QuantizedLinear,
+    apply,
+    dequantize_weight,
+    quantize_linear,
+)

@@ -1,0 +1,118 @@
+"""Mantissa-bit sharing + Adaptive Searching (paper §3.1).
+
+Given RTN codes for a ``[K, N]`` weight, group ``k`` consecutive codes along
+the input-channel axis K and force their mantissa LSB (code bit 0) to a single
+shared value ``m0``; ``m0`` is chosen per group to minimize the MSE against
+the original weights:
+
+    m0* = argmin_{m0 in {0,1}}  sum_i (DeQ(G(code_i, m0)) - w_i)^2
+
+Two strategies:
+  * ``set_lsb``      — the paper's formulation: keep RTN's high bits, only
+                       overwrite bit 0 with the candidate m0.
+  * ``requantize``   — beyond-paper refinement: for each candidate m0,
+                       re-round every weight to its nearest representable
+                       value on the LSB==m0 sub-lattice, then pick the better
+                       group. Error is <= set_lsb by construction.
+
+Because the channel scale is constant within a column, the argmin over the
+scaled MSE equals the argmin over normalized-weight MSE, so all math here is
+done on normalized weights (w / s_q).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .formats import AMSFormat, FPFormat, code_to_value, lsb_subgrid
+from .rtn import channel_scales, quantize_rtn
+
+
+def _group_err(vals: jnp.ndarray, wn: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Sum of squared errors per (group, column): [K/k, N]."""
+    K, N = wn.shape
+    d = (vals - wn) ** 2
+    return d.reshape(K // k, k, N).sum(axis=1)
+
+
+def _subgrid_codes(wn: jnp.ndarray, fmt: FPFormat, lsb: int) -> jnp.ndarray:
+    """Nearest code to each normalized weight on the LSB==lsb sub-lattice."""
+    sel, _, mids = lsb_subgrid(fmt, lsb)
+    idx = jnp.searchsorted(jnp.asarray(mids), jnp.abs(wn).astype(jnp.float32),
+                           side="right")
+    mag = jnp.asarray(sel)[idx]
+    sign = (wn < 0).astype(jnp.int32)
+    return mag | (sign << fmt.code_bits)
+
+
+def share_mantissa(
+    codes: jnp.ndarray,
+    wn: jnp.ndarray,
+    fmt: FPFormat,
+    k: int,
+    strategy: str = "set_lsb",
+) -> jnp.ndarray:
+    """Return codes whose bit-0 is constant within each k-group along axis 0.
+
+    ``wn`` is the *normalized* original weight (w / s_q), same shape as codes.
+    """
+    if k == 1:
+        return codes
+    K, N = codes.shape
+    if K % k != 0:
+        raise ValueError(f"K={K} not divisible by group size k={k}")
+
+    if strategy == "set_lsb":
+        cand0 = codes & ~jnp.int32(1)
+        cand1 = codes | jnp.int32(1)
+    elif strategy == "requantize":
+        cand0 = _subgrid_codes(wn, fmt, 0)
+        cand1 = _subgrid_codes(wn, fmt, 1)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    err0 = _group_err(code_to_value(fmt, cand0), wn, k)
+    err1 = _group_err(code_to_value(fmt, cand1), wn, k)
+    pick1 = (err1 < err0)[:, None, :]  # [K/k, 1, N]
+    out = jnp.where(
+        jnp.broadcast_to(pick1, (K // k, k, N)).reshape(K, N),
+        cand1,
+        cand0,
+    )
+    return out.astype(jnp.int32)
+
+
+def ams_quantize(
+    w: jnp.ndarray,
+    scheme: AMSFormat,
+    strategy: str = "set_lsb",
+    scale: jnp.ndarray | None = None,
+):
+    """Full AMS-Quant: channel-wise RTN -> grouped LSB sharing.
+
+    Returns (codes int32 [K, N], scale f32 [N]). With scheme.k == 1 this is
+    plain RTN at the base format (the paper's baselines).
+    """
+    w = w.astype(jnp.float32)
+    fmt = scheme.base
+    if scale is None:
+        scale = channel_scales(w, fmt)
+    codes, _ = quantize_rtn(w, fmt, scale=scale)
+    if scheme.k > 1:
+        codes = share_mantissa(codes, w / scale, fmt, scheme.k, strategy)
+    return codes, scale
+
+
+def ams_quantize_dequantize(
+    w: jnp.ndarray, scheme: AMSFormat, strategy: str = "set_lsb"
+) -> jnp.ndarray:
+    """Fake-quant round trip through the AMS scheme (for accuracy evals)."""
+    codes, scale = ams_quantize(w, scheme, strategy)
+    return code_to_value(scheme.base, codes) * scale
+
+
+def shared_lsb_bits(codes: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Extract the per-group shared bit: [K/k, N]. Validates group agreement."""
+    K, N = codes.shape
+    g = (codes & 1).reshape(K // k, k, N)
+    return g[:, 0, :]

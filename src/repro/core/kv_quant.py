@@ -1,0 +1,98 @@
+"""AMS-KV: mantissa-bit sharing applied to the KV cache (beyond-paper).
+
+§Perf pair 3 showed that for MHA archs at 32k context the decode roofline is
+KV-cache-bound, not weight-bound — the paper's weight-only scope saturates.
+The same AMS math transfers directly: quantize each inserted K/V vector to
+e2m2 along the head_dim axis with one scale per (token, head) (the exact
+analogue of channel-wise RTN) and share each mantissa LSB across k=4
+neighbors chosen by the paper's adaptive MSE search. Storage per value:
+
+    4-bit hi nibbles (2/int8) + 1 shared LSB per 4 values + f32 scale/head
+    = 4.25 bits + 32/head  ->  3.7x smaller cache than bf16.
+
+Each token is quantized ONCE at insert (no repacking of history), so decode
+cost is one dequant pass over the cache — on TPU that rides the same
+restore-before-MXU pattern as the weight kernel.
+
+This module is the validated numerical core + packed container; wiring into
+`flash_decode` is the documented integration point (DESIGN.md §Future).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ams import share_mantissa
+from .formats import AMSFormat, code_to_value, get_format, get_scheme
+from .rtn import quantize_rtn
+
+KV_SCHEME = get_scheme("fp4.25-e2m2")
+
+
+def quantize_kv(x: jnp.ndarray, scheme: AMSFormat = KV_SCHEME,
+                strategy: str = "set_lsb"):
+    """Quantize [..., hd] vectors -> packed planes.
+
+    Returns dict: hi int8 [..., hd/2] (two 4-bit codes per byte),
+    lsb int32 [..., hd/128] bitplane (one bit per k-group), scale f32 [..., 1].
+    Requires hd % (32 * k) == 0 (hd=64/128/256 all qualify for k=4... hd%128;
+    for hd in {64, 96} the lsb plane packs ceil groups into one int32).
+    """
+    fmt = scheme.base
+    k = scheme.k
+    hd = x.shape[-1]
+    assert hd % k == 0
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, hd).astype(jnp.float32)   # [M, hd]
+    # channel-wise = per-vector scale: treat vectors as columns
+    wt = x2.T                                    # [hd, M]
+    codes, scale = quantize_rtn(wt, fmt)         # codes [hd, M], scale [M]
+    codes = share_mantissa(codes, wt / scale, fmt, k, strategy)
+    codes = codes.T                              # [M, hd]
+
+    hi = (codes >> 1).astype(jnp.uint8)          # 4-bit segments
+    hi_packed = (hi[:, 0::2] | (hi[:, 1::2] << 4)).astype(jnp.int8)
+    g = hd // k                                  # groups per vector
+    gw = -(-g // 32)                             # int32 words for the bitplane
+    bits = (codes[:, ::k] & 1)                   # [M, g]
+    bits = jnp.pad(bits, ((0, 0), (0, gw * 32 - g)))
+    shifts = jnp.arange(32, dtype=jnp.int32)[None, None, :]
+    lsb = jnp.bitwise_or.reduce(
+        (bits.reshape(-1, gw, 32) << shifts), axis=-1).astype(jnp.int32)
+    return {
+        "hi": hi_packed.reshape(*lead, hd // 2),
+        "lsb": lsb.reshape(*lead, gw),
+        "scale": scale.reshape(*lead, 1).astype(jnp.float32),
+    }
+
+
+def dequantize_kv(q, hd: int, scheme: AMSFormat = KV_SCHEME,
+                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Packed planes -> [..., hd] values (bit restore, same as the kernel)."""
+    fmt = scheme.base
+    k = scheme.k
+    lead = q["hi"].shape[:-1]
+    hi = q["hi"].reshape(-1, hd // 2).astype(jnp.int32) & 0xFF
+    lo_n = hi & 0xF
+    hi_n = (hi >> 4) & 0xF
+    codes_hi = jnp.stack([lo_n, hi_n], axis=-1).reshape(-1, hd)
+    g = hd // k
+    gw = q["lsb"].shape[-1]
+    lsb_words = q["lsb"].reshape(-1, gw)
+    bits = jnp.stack([(lsb_words >> j) & 1 for j in range(32)],
+                     axis=-1).reshape(-1, gw * 32)[:, :g]
+    lsb_full = jnp.repeat(bits, k, axis=-1)
+    codes = (codes_hi << 1) | lsb_full
+    vals = code_to_value(fmt, codes) * q["scale"].reshape(-1, 1)
+    return vals.reshape(*lead, hd).astype(dtype)
+
+
+def kv_bytes(hd: int, scheme: AMSFormat = KV_SCHEME) -> Tuple[int, int]:
+    """(packed bytes per vector, bf16 bytes per vector)."""
+    g = hd // scheme.k
+    gw = -(-g // 32)
+    return hd // 2 + 4 * gw + 4, 2 * hd

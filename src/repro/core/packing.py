@@ -1,0 +1,170 @@
+"""Ahead-of-time weight packing into 32-bit-aligned bit-planes (paper §3.2/3.3).
+
+TPU adaptation of TC-FPx-style prepacking: instead of per-thread uint16
+segments we store *planes* of int32 words laid out ``[K_packed, N]`` so that
+Pallas BlockSpecs tile them with fully regular HBM->VMEM DMAs:
+
+  * ``hi``  plane — the per-weight unshared bits (code >> 1 when k > 1, the
+              full code when k == 1), ``per_word = 32 // hi_bits`` consecutive
+              K-positions per int32 word.
+  * ``lsb`` plane — one bit per k-group (absent when k == 1); 32 groups per
+              int32 word.
+  * ``fp533`` fused container — the paper's flagship special case: FP5.33
+              (e2m3, k=3) packs 3x5-bit high segments + 1 shared LSB into each
+              half-word, i.e. 6 weights + 2 shared bits per int32, with ZERO
+              padding waste. One memory stream instead of two.
+
+K is zero-padded to the packing block; code 0 decodes to +0 so padded rows
+are exact no-ops in the matmul (activations are also zero-padded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import AMSFormat
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class PackLayout:
+    """Static description of how a scheme is packed."""
+
+    scheme: AMSFormat
+    container: str  # "planes" | "fp533"
+    hi_bits: int
+    per_word: int  # hi codes per int32 word
+    k_block: int  # K must be padded to a multiple of this
+
+    @property
+    def lsb_groups_per_word(self) -> int:
+        return 32
+
+    def padded_k(self, K: int) -> int:
+        return _ceil_to(K, self.k_block)
+
+    def hi_rows(self, K: int) -> int:
+        return self.padded_k(K) // self.per_word
+
+    def lsb_rows(self, K: int) -> int:
+        if self.scheme.k == 1 or self.container == "fp533":
+            return 0
+        return self.padded_k(K) // (32 * self.scheme.k)
+
+    def packed_bytes(self, K: int, N: int) -> int:
+        return 4 * N * (self.hi_rows(K) + self.lsb_rows(K))
+
+    def effective_bits(self, K: int, N: int) -> float:
+        return self.packed_bytes(K, N) * 8.0 / (K * N)
+
+
+def make_layout(scheme: AMSFormat, container: Optional[str] = None) -> PackLayout:
+    k = scheme.k
+    if container is None:
+        container = "fp533" if (k == 3 and scheme.base.name == "e2m3") else "planes"
+    if container == "fp533":
+        assert k == 3 and scheme.base.total_bits == 6
+        # 6 weights (2 groups) per int32; K block must also be a multiple of 6.
+        return PackLayout(scheme, "fp533", hi_bits=5, per_word=6, k_block=6)
+    hi_bits = scheme.base.total_bits - (1 if k > 1 else 0)
+    per_word = 32 // hi_bits
+    if k == 1:
+        k_block = per_word
+    else:
+        k_block = math.lcm(per_word, 32 * k)
+    return PackLayout(scheme, container, hi_bits, per_word, k_block)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedWeight:
+    """Packed quantized weight planes + channel scales (a JAX pytree).
+
+    Shapes: hi [hi_rows, N] int32; lsb [lsb_rows, N] int32 (or shape [0, N]);
+    scale [N] f32. ``layout`` / ``K`` / ``N`` are static metadata.
+    """
+
+    hi: jnp.ndarray
+    lsb: jnp.ndarray
+    scale: jnp.ndarray
+    layout: PackLayout = dataclasses.field(metadata=dict(static=True))
+    K: int = dataclasses.field(metadata=dict(static=True))
+    N: int = dataclasses.field(metadata=dict(static=True))
+
+
+def pack(codes: jnp.ndarray, scale: jnp.ndarray, scheme: AMSFormat,
+         container: Optional[str] = None) -> PackedWeight:
+    """Pack full codes [K, N] (bit0 already shared per group) into planes."""
+    layout = make_layout(scheme, container)
+    K, N = codes.shape
+    Kp = layout.padded_k(K)
+    codes = jnp.pad(codes.astype(jnp.int32), ((0, Kp - K), (0, 0)))
+    k = scheme.k
+
+    if layout.container == "fp533":
+        hi = (codes >> 1).reshape(Kp // 6, 6, N)
+        lsb = (codes & 1).reshape(Kp // 3, 3, N)[:, 0, :].reshape(Kp // 6, 2, N)
+        word = jnp.zeros((Kp // 6, N), jnp.int32)
+        # half h (bits 16h..16h+15): w0|w1<<5|w2<<10|lsb<<15
+        for h in range(2):
+            half = (hi[:, 3 * h] | (hi[:, 3 * h + 1] << 5)
+                    | (hi[:, 3 * h + 2] << 10) | (lsb[:, h] << 15))
+            word = word | (half << (16 * h))
+        return PackedWeight(word, jnp.zeros((0, N), jnp.int32),
+                            scale.astype(jnp.float32), layout, K, N)
+
+    hi_codes = (codes >> 1) if k > 1 else codes
+    pw = layout.per_word
+    hi_g = hi_codes.reshape(Kp // pw, pw, N)
+    shifts = (jnp.arange(pw, dtype=jnp.int32) * layout.hi_bits)[None, :, None]
+    hi = jnp.bitwise_or.reduce(hi_g << shifts, axis=1).astype(jnp.int32)
+
+    if k > 1:
+        bits = (codes & 1).reshape(Kp // k, k, N)[:, 0, :]  # one bit per group
+        bits_g = bits.reshape(Kp // (32 * k), 32, N)
+        bshift = jnp.arange(32, dtype=jnp.int32)[None, :, None]
+        lsb = jnp.bitwise_or.reduce(bits_g << bshift, axis=1).astype(jnp.int32)
+    else:
+        lsb = jnp.zeros((0, N), jnp.int32)
+    return PackedWeight(hi, lsb, scale.astype(jnp.float32), layout, K, N)
+
+
+def unpack(pw: PackedWeight) -> jnp.ndarray:
+    """Reverse of pack(): full signed codes [K, N] (reference path & tests)."""
+    layout = pw.layout
+    k = layout.scheme.k
+    Kp = layout.padded_k(pw.K)
+    N = pw.N
+
+    if layout.container == "fp533":
+        halves = jnp.stack(
+            [(pw.hi >> (16 * h)) & 0xFFFF for h in range(2)], axis=1
+        )  # [Kp//6, 2, N]
+        w_hi = jnp.stack(
+            [(halves >> (5 * j)) & 0x1F for j in range(3)], axis=2
+        )  # [Kp//6, 2, 3, N]
+        lsb = (halves >> 15) & 1  # [Kp//6, 2, N]
+        codes = (w_hi << 1) | lsb[:, :, None, :]
+        return codes.reshape(Kp, N)[: pw.K]
+
+    pwords = layout.per_word
+    mask = (1 << layout.hi_bits) - 1
+    hi = jnp.stack(
+        [(pw.hi >> (layout.hi_bits * j)) & mask for j in range(pwords)], axis=1
+    ).reshape(Kp, N)
+    if k == 1:
+        return hi[: pw.K]
+    gbits = jnp.stack([(pw.lsb >> j) & 1 for j in range(32)], axis=1).reshape(
+        Kp // k, N
+    )
+    lsb_full = jnp.repeat(gbits, k, axis=0)
+    return ((hi << 1) | lsb_full)[: pw.K]

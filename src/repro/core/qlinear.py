@@ -1,0 +1,98 @@
+"""QuantizedLinear: the deployable AMS-Quant linear layer.
+
+Holds packed planes + channel scales. ``apply`` dispatches between:
+  * ``ref``     — pure-jnp unpack -> bit decode -> matmul (XLA path; also the
+                  oracle the Pallas kernel is tested against).
+  * ``pallas``  — fused Pallas kernel (kernels/ams_matmul.py): packed words
+                  stream HBM->VMEM, bit-restore to bf16 in VREGs, MXU matmul.
+                  On CPU runtimes use ``pallas_interpret``.
+  * ``fused_ref`` — jnp path shaped to encourage XLA to fuse dequant into the
+                  consumer (K-blocked scan), used as a dry-run stand-in with
+                  packed-byte traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .ams import ams_quantize
+from .formats import AMSFormat, code_to_value
+from .packing import PackedWeight, pack, unpack
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedLinear:
+    """Packed AMS-quantized linear weight (+ optional fp bias)."""
+
+    packed: PackedWeight
+    bias: Optional[jnp.ndarray]  # [N] bf16/f32 or None
+
+    @property
+    def scheme(self) -> AMSFormat:
+        return self.packed.layout.scheme
+
+    @property
+    def in_features(self) -> int:
+        return self.packed.K
+
+    @property
+    def out_features(self) -> int:
+        return self.packed.N
+
+
+def quantize_linear(
+    w: jnp.ndarray,
+    scheme: AMSFormat,
+    bias: Optional[jnp.ndarray] = None,
+    strategy: str = "set_lsb",
+    container: Optional[str] = None,
+) -> QuantizedLinear:
+    """Offline PTQ of a [K, N] weight into a QuantizedLinear.
+
+    K is zero-padded up to the packing block (padded rows quantize to code 0
+    == +0.0 and multiply zero-padded activations, so they are exact no-ops);
+    the true K is kept in the PackedWeight.
+    """
+    from .packing import make_layout
+
+    K, _ = w.shape
+    layout = make_layout(scheme, container)
+    Kp = layout.padded_k(K)
+    wp = jnp.pad(w.astype(jnp.float32), ((0, Kp - K), (0, 0)))
+    codes, scale = ams_quantize(wp, scheme, strategy)
+    packed = pack(codes, scale, scheme, container)
+    packed = dataclasses.replace(packed, K=K)
+    return QuantizedLinear(packed, bias)
+
+
+def dequantize_weight(q: QuantizedLinear, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Materialize the [K, N] dequantized weight (reference/debug)."""
+    codes = unpack(q.packed)
+    w = code_to_value(q.scheme.base, codes) * q.packed.scale
+    return w.astype(dtype)
+
+
+def apply(q: QuantizedLinear, x: jnp.ndarray, impl: str = "ref") -> jnp.ndarray:
+    """y = x @ DeQ(W) (+ bias). x: [..., K]."""
+    if impl == "ref":
+        w = dequantize_weight(q, dtype=x.dtype)
+        y = x @ w
+    elif impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops  # lazy: keeps core importable standalone
+
+        y = ops.ams_matmul(x, q.packed, interpret=(impl == "pallas_interpret"))
+        y = y.astype(x.dtype)
+    elif impl == "fused_ref":
+        from repro.kernels import ref  # lazy
+
+        y = ref.ams_matmul_blocked(x, q.packed).astype(x.dtype)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    if q.bias is not None:
+        y = y + q.bias.astype(y.dtype)
+    return y

@@ -1,0 +1,64 @@
+"""Channel-wise Round-To-Nearest floating-point quantization (paper §2.1/§3.1).
+
+Weights are stored ``[K, N]`` (in_features, out_features). Quantization is
+per *output channel* n: ``s_q[n] = max_k |W[k, n]| / max_normal(fmt)``;
+AMS mantissa sharing later groups along the *input-channel* axis K (paper
+§3.1, "Mantissa Sharing ... along the input-channel dimension").
+
+Rounding is round-to-nearest with ties away from zero (the argmin in the
+paper's Round() is tie-agnostic; ties have measure ~0 for real weights).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import FPFormat, code_to_value, mag_midpoints, mag_table
+
+
+def channel_scales(w: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
+    """Per-output-channel scales s_q[n] = max|W[:, n]| / max_normal."""
+    amax = jnp.max(jnp.abs(w), axis=0)
+    scale = amax / np.float32(fmt.max_normal)
+    return jnp.where(scale == 0, jnp.float32(1.0), scale).astype(jnp.float32)
+
+
+def nearest_mag_codes(x_abs: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
+    """Nearest unsigned-magnitude code for |normalized| values (clipped)."""
+    mids = jnp.asarray(mag_midpoints(fmt))
+    # searchsorted over the (tiny: <=2^code_bits-1) midpoint table.
+    idx = jnp.searchsorted(mids, x_abs.astype(jnp.float32), side="right")
+    return idx.astype(jnp.int32)
+
+
+def quantize_rtn(w: jnp.ndarray, fmt: FPFormat, scale: jnp.ndarray | None = None):
+    """RTN-quantize ``w`` -> (codes int32, scale f32[N]).
+
+    codes layout: sign << (e+m) | magnitude_code.
+    """
+    w = w.astype(jnp.float32)
+    if scale is None:
+        scale = channel_scales(w, fmt)
+    wn = w / scale
+    mag = nearest_mag_codes(jnp.abs(wn), fmt)
+    sign = (wn < 0).astype(jnp.int32)
+    codes = mag | (sign << fmt.code_bits)
+    return codes, scale
+
+
+def dequantize(codes: jnp.ndarray, fmt: FPFormat, scale: jnp.ndarray) -> jnp.ndarray:
+    """DeQ(W) = decode(codes) * s_q (paper eqn. 2)."""
+    return code_to_value(fmt, codes) * scale
+
+
+def quantize_dequantize(w: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
+    """Fake-quant round trip (used by accuracy benchmarks & baselines)."""
+    codes, scale = quantize_rtn(w, fmt)
+    return dequantize(codes, fmt, scale)
+
+
+def table_values(fmt: FPFormat) -> np.ndarray:
+    """All representable signed values (numpy, for tests/analysis)."""
+    t = mag_table(fmt)
+    return np.concatenate([-t[::-1], t])

@@ -1,0 +1,57 @@
+"""Jitted public wrappers around the AMS-Quant Pallas kernels.
+
+Handles shape normalization (leading batch dims, ragged B/K/N padding) so the
+kernel only ever sees fully-tiled operands, then slices the result back.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import PackedWeight
+from . import ams_matmul as _k
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def ams_matmul(
+    x: jnp.ndarray,
+    pw: PackedWeight,
+    *,
+    block_b: int = 8,
+    block_n: int = 256,
+    block_k: int | None = None,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """y[..., N] = x[..., K] @ DeQ(W). Pallas path (set interpret=True on CPU)."""
+    lay = pw.layout
+    K, N = pw.K, pw.N
+    lead = x.shape[:-1]
+    B = int(jnp.prod(jnp.asarray(lead))) if lead else 1
+    x2 = x.reshape(B, x.shape[-1])
+
+    bk = block_k or _k.default_bk(lay)
+    bb = min(block_b, _ceil_to(B, 8))
+    bn = min(block_n, _ceil_to(N, 128))
+
+    Bp, Kp, Np = _ceil_to(B, bb), _ceil_to(K, bk), _ceil_to(N, bn)
+    x2 = jnp.pad(x2, ((0, Bp - B), (0, Kp - x2.shape[-1])))
+
+    hi_rows = Kp // lay.per_word
+    hi = jnp.pad(pw.hi, ((0, hi_rows - pw.hi.shape[0]), (0, Np - N)))
+    k = lay.scheme.k
+    if lay.container == "planes" and k > 1:
+        lsb_rows = Kp // (32 * k)
+        lsb = jnp.pad(pw.lsb, ((0, lsb_rows - pw.lsb.shape[0]), (0, Np - N)))
+    else:
+        lsb = jnp.zeros((1, Np), jnp.int32)
+    scale = jnp.pad(pw.scale, (0, Np - N)).reshape(1, Np)
+
+    y = _k.ams_matmul_padded(
+        x2, hi, lsb, scale, lay=lay, B=Bp, K=Kp, N=Np,
+        bb=bb, bk=bk, bn=bn, out_dtype=out_dtype, interpret=interpret,
+    )
+    return y[:B, :N].reshape(*lead, N)

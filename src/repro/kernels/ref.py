@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the AMS-Quant matmul kernels.
+
+``ams_matmul_ref`` is the bit-exact reference the Pallas kernel is tested
+against. ``ams_matmul_blocked`` is the XLA-path production fallback: a
+K-blocked scan that never materializes the full dequantized weight (the
+live set per step is one [bK, N] tile), which is what the dry-run lowers
+when the Pallas kernel is unavailable on the target.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import code_to_value
+from repro.core.packing import PackedWeight, unpack
+
+
+def dequant_full(pw: PackedWeight, dtype=jnp.float32) -> jnp.ndarray:
+    """[K, N] dequantized weight (scale applied)."""
+    codes = unpack(pw)
+    return (code_to_value(pw.layout.scheme.base, codes) * pw.scale).astype(dtype)
+
+
+def ams_matmul_ref(x: jnp.ndarray, pw: PackedWeight) -> jnp.ndarray:
+    """y = x @ DeQ(W), f32 accumulation. x: [B, K]."""
+    w = dequant_full(pw, jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+
+
+def _decode_codes(pw: PackedWeight, codes: jnp.ndarray) -> jnp.ndarray:
+    return code_to_value(pw.layout.scheme.base, codes)
+
+
+def ams_matmul_blocked(
+    x: jnp.ndarray, pw: PackedWeight, block_k: int = 512
+) -> jnp.ndarray:
+    """K-blocked scan: unpack+decode one K-tile at a time, accumulate in f32.
+
+    Bounds the dequantized working set to [bK, N] regardless of K, so the
+    HBM traffic XLA sees is dominated by the *packed* planes — this is the
+    paper's memory-saving made visible to the XLA scheduler without Pallas.
+    """
+    lay = pw.layout
+    K, N = pw.K, pw.N
+    Kp = lay.padded_k(K)
+    # choose a block that's a multiple of the packing block
+    bK = max(lay.k_block, (block_k // lay.k_block) * lay.k_block)
+    nb = -(-Kp // bK)
+    Kpp = nb * bK
+
+    xb = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, Kpp - K)))
+    xb = xb.reshape(x.shape[0], nb, bK).transpose(1, 0, 2)  # [nb, B, bK]
+
+    hi = jnp.pad(pw.hi, ((0, Kpp // lay.per_word - pw.hi.shape[0]), (0, 0)))
+    hi = hi.reshape(nb, bK // lay.per_word, N)
+    k = lay.scheme.k
+    if lay.container == "planes" and k > 1:
+        lr = Kpp // (32 * k)
+        lsb = jnp.pad(pw.lsb, ((0, lr - pw.lsb.shape[0]), (0, 0)))
+        lsb = lsb.reshape(nb, bK // (32 * k), N)
+    else:
+        lsb = jnp.zeros((nb, 1, N), jnp.int32)
+
+    def body(acc, blk):
+        xk, hik, lsbk = blk
+        sub = PackedWeight(hik, lsbk if (lay.container == "planes" and k > 1)
+                           else jnp.zeros((0, N), jnp.int32),
+                           jnp.ones((N,), jnp.float32), lay, bK, N)
+        w = _decode_codes(sub, unpack(sub))
+        return acc + jnp.dot(xk, w, preferred_element_type=jnp.float32), None
+
+    acc0 = jnp.zeros((x.shape[0], N), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (xb, hi, lsb))
+    return acc * pw.scale[None, :]

@@ -1,0 +1,64 @@
+"""Block-shape selection + VMEM budgeting for the AMS matmul kernel.
+
+The dry-run has no wall clock, so tile choice is *structural*: pick the
+largest MXU-aligned (bK, bN) whose working set fits the VMEM budget with
+double-buffered input streams, preferring K-depth (amortizes the f32
+accumulator) over N-width. This is the reasoning the §Perf Pallas hints
+prescribe — from the lowered resource model, not a trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.packing import PackLayout
+
+VMEM_BYTES = 16 * 2 ** 20  # v5e per-core VMEM
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    bb: int
+    bk: int
+    bn: int
+    vmem_bytes: int
+    pipeline_buffers: int = 2  # double buffering
+
+
+def vmem_usage(lay: PackLayout, bb: int, bk: int, bn: int,
+               buffers: int = 2) -> int:
+    """Bytes of VMEM a (bb, bk, bn) tile claims in ams_matmul."""
+    k = lay.scheme.k
+    hi = 4 * (bk // lay.per_word) * bn
+    lsb = 4 * (bk // (32 * k)) * bn if (lay.container == "planes" and k > 1) else 0
+    x = 4 * bb * bk
+    scale = 4 * bn
+    streams = buffers * (hi + lsb + x + scale)        # double-buffered DMAs
+    decoded = 4 * bk * bn                              # f32 restore tile
+    acc = 4 * bb * bn                                  # f32 accumulator
+    out = 4 * bb * bn
+    return streams + decoded + acc + out
+
+
+def plan_tiles(lay: PackLayout, B: int, K: int, N: int,
+               budget: int = VMEM_BYTES) -> TilePlan:
+    """Largest aligned tile under budget; K-major growth."""
+    bb = min(max(8, 1 << (B - 1).bit_length()), 128)
+    base_k = math.lcm(lay.k_block, 128)
+    best = None
+    for bn in (512, 256, 128):
+        for mult in (8, 6, 4, 3, 2, 1):
+            bk = base_k * mult
+            if bk > max(base_k, K * 2):
+                continue
+            use = vmem_usage(lay, bb, bk, bn)
+            if use <= budget:
+                cand = TilePlan(bb, bk, bn, use)
+                if best is None or (cand.bk * cand.bn) > (best.bk * best.bn):
+                    best = cand
+        if best is not None:
+            break
+    if best is None:  # fall back to the minimum legal tile
+        best = TilePlan(8, base_k, 128, vmem_usage(lay, 8, base_k, 128))
+    return best

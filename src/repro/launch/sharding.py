@@ -1,0 +1,165 @@
+"""Parameter/cache PartitionSpec rules (Megatron TP pairing + FSDP).
+
+Name-driven: every linear in the model zoo is classified column-parallel
+(output dim over `model`) or row-parallel (input dim over `model`), so that
+activations alternate sharded -> psum-replicated exactly once per block pair
+and never reshard mid-block. FSDP additionally shards the *other* weight dim
+over `data` during training (XLA turns that into the standard all-gather-
+before-use / reduce-scatter-of-grads pattern).
+
+Quantized (serving) params have planes `hi`/`lsb` [.., K_packed_rows, N] and
+`scale` [.., N]; they follow the same col/row classification — N over model
+for column-parallel, packed-K rows over model for row-parallel — and are
+never FSDP-sharded (decode wants weights resident).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# output dim (N) sharded over model
+COL_PARALLEL = {
+    "wq", "wk", "wv", "w_gate", "w_up", "in_proj", "in_x", "in_gate",
+    "wq_b", "w_uk", "w_uv", "dt_proj", "lm_head",
+}
+# input dim (K) sharded over model (output psum-replicated)
+ROW_PARALLEL = {"wo", "w_down", "out_proj", "x_proj", "w_rec_gate", "w_in_gate"}
+# never sharded over model (small / accuracy-critical)
+REPLICATED = {"router", "wq_a", "wkv_a"}
+
+# 1D vectors living in the model-sharded inner width
+MODEL_VECTORS = {"A_log", "D", "lam", "conv_b"}
+
+
+def _path_names(path):
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def param_spec(path, leaf, *, fsdp: Optional[str], tp: str = "model",
+               n_stack: int = 0, moe: str = "ep") -> P:
+    """PartitionSpec for one parameter leaf.
+
+    n_stack: number of leading stacked dims (layer-scan G).
+    moe: 'ep' shards the expert dim over `model` (serving / expert-parallel);
+         'tp' leaves experts unsharded and TP-shards each expert's FFN dims
+         like a dense FFN (training path — see models/moe.py:moe_tp)."""
+    names = _path_names(path)
+    last = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    gparent = names[-3] if len(names) >= 3 else ""
+    is_expert = "experts" in names
+    ndim = leaf.ndim
+
+    lead: tuple = ()
+    if n_stack:
+        lead = (None,) * n_stack
+    if is_expert:
+        if moe == "tp":
+            lead = lead + (None,)  # expert dim replicated; FFN dims TP'd
+            is_expert = False
+        else:
+            lead = lead + (tp,)    # expert dim over model (EP)
+
+    body_nd = ndim - len(lead)
+
+    def cls(name: str) -> str:
+        if name in COL_PARALLEL:
+            return "col"
+        if name in ROW_PARALLEL:
+            return "row"
+        return "rep"
+
+    # --- packed quantized planes: parent is the linear name.
+    # Serving layout: ALWAYS shard the output-channel dim N over model
+    # (column-style), including row-parallel linears — packed-K rows are not
+    # generally divisible by tp, and at decode batch sizes the extra
+    # activation all-gather is nanoscale next to the weight-bytes win.
+    if last in ("hi", "lsb", "scale"):
+        ep_tp = None if is_expert else tp  # EP: expert dim already uses model
+        if last == "scale":
+            return P(*lead, ep_tp)
+        return P(*lead, None, ep_tp)
+
+    # --- plain weights / biases
+    if last == "w":
+        c = cls(parent)
+        if parent == "embed" or gparent == "embed":
+            return P(*lead, tp, None)  # vocab over model
+        ep_tp = None if is_expert else tp
+        if body_nd != 2:
+            return P(*lead, *([None] * body_nd))
+        # §Perf: FSDP-sharding a SMALL contraction dim (MLA/LoRA factors,
+        # dt_proj...) makes the SPMD partitioner emit partial-sum all-reduces
+        # of full activations/attention scores instead of cheap weight
+        # gathers (measured: 9.6TB/step of score all-reduces on minicpm3
+        # train_4k). Factors with any dim < 1024 are cheap to keep unsharded.
+        wf = fsdp if min(leaf.shape[-2:]) >= 1024 else None
+        if c == "col":
+            return P(*lead, wf, ep_tp)
+        if c == "row":
+            return P(*lead, ep_tp, wf)
+        return P(*lead, wf, None)
+    if last == "b":
+        c = cls(parent)
+        ep_tp = None if is_expert else tp
+        return P(*lead, ep_tp if c == "col" else None)
+
+    # --- SSM/LRU vectors & conv kernels in the model-sharded width
+    if last in MODEL_VECTORS:
+        if last == "A_log":
+            return P(*lead, tp, None)
+        if last == "conv_b":
+            return P(*lead, tp)
+        return P(*lead, tp)
+    if last == "conv_w":
+        return P(*lead, None, tp)
+
+    # norms, scalars, everything else: replicated
+    return P(*lead, *([None] * body_nd))
+
+
+def params_shardings(params_shape, mesh, *, fsdp: bool, stacked_key="layers",
+                     moe: str = "ep"):
+    """Pytree of NamedSharding matching a params(-shaped) pytree."""
+    fsdp_axis = "data" if fsdp else None
+
+    def visit(path, leaf):
+        names = _path_names(path)
+        n_stack = 1 if names and names[0] == stacked_key else 0
+        spec = param_spec(path, leaf, fsdp=fsdp_axis, n_stack=n_stack, moe=moe)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, params_shape)
+
+
+def cache_spec(path, leaf, *, dp, tp: str = "model", seq_shard: bool,
+               n_stack: int = 0) -> P:
+    """KV/state cache sharding. dp: axis (tuple) for batch or None."""
+    names = _path_names(path)
+    last = names[-1]
+    lead = (None,) * n_stack
+    if last in ("k", "v", "kv"):
+        # [.., B, S, kv, hd]
+        return P(*lead, dp, tp if seq_shard else None, None, None)
+    if last == "conv":
+        return P(*lead, dp, None, tp)
+    if last == "ssm":
+        return P(*lead, dp, tp, None)
+    if last == "state":
+        return P(*lead, dp, tp)
+    return P(*lead, *([None] * (leaf.ndim - n_stack)))
+
+
+def cache_shardings(cache_shape, mesh, *, dp, seq_shard: bool,
+                    stacked_key="layers"):
+    def visit(path, leaf):
+        names = _path_names(path)
+        n_stack = 1 if names and names[0] == stacked_key else 0
+        spec = cache_spec(path, leaf, dp=dp, seq_shard=seq_shard,
+                          n_stack=n_stack)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, cache_shape)

@@ -1,0 +1,63 @@
+"""Assigned (architecture x input-shape) cells and their abstract inputs.
+
+Shapes (per the brief):
+    train_4k     seq 4096,   global_batch 256  -> train_step
+    prefill_32k  seq 32768,  global_batch 32   -> prefill_step
+    decode_32k   seq 32768,  global_batch 128  -> serve_step (1 new token)
+    long_500k    seq 524288, global_batch 1    -> serve_step; ONLY for
+                 sub-quadratic archs (falcon-mamba, recurrentgemma); the 8
+                 full-attention archs skip it (recorded in DESIGN.md).
+
+VLM/audio: the modality frontend is a stub — ``input_specs`` carves
+``num_prefix_embeds`` positions out of the sequence and supplies them as
+precomputed f32 embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.configs import get_config, list_archs
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.policy import QuantPolicy
+
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+DEFAULT_SERVE_QUANT = QuantPolicy(scheme="fp5.33-e2m3", strategy="set_lsb",
+                                  impl="ref")
+
+
+def shapes_for(cfg: ModelConfig) -> List[str]:
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        out.append("long_500k")
+    return out
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        cells.extend((arch, s) for s in shapes_for(cfg))
+    return cells
+
+
+def make_run_config(arch: str, shape: str, *,
+                    quant: QuantPolicy | None = None,
+                    **overrides) -> RunConfig:
+    cfg = get_config(arch)
+    seq, batch, mode = SHAPES[shape]
+    q = None
+    if mode in ("prefill", "decode"):
+        q = quant if quant is not None else DEFAULT_SERVE_QUANT
+    rc = RunConfig(model=cfg, seq_len=seq, global_batch=batch, mode=mode,
+                   quant=q)
+    if overrides:
+        rc = dataclasses.replace(rc, **overrides)
+    return rc

@@ -1,0 +1,292 @@
+"""Jitted step functions: train_step (microbatched grad accumulation),
+prefill_step, serve_step (decode) — with full production shardings.
+
+This module is mesh-parametric: given a mesh + RunConfig it returns AOT-
+lowerable jitted callables with explicit in/out shardings. The dry-run
+lowers exactly these steps; the train/serve drivers execute them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import (
+    ParallelCtx,
+    decode_step,
+    forward_seq,
+    init_params,
+    make_cache,
+    model_dims,
+)
+from repro.models.common import quantize_params
+from repro.optim import (
+    AdamWConfig,
+    apply_updates,
+    compressed_psum,
+    init_state,
+    warmup_cosine,
+)
+from . import sharding as SH
+from .mesh import dp_axes, tp_axis
+
+
+# ---------------------------------------------------------------------------
+# Context / helpers
+# ---------------------------------------------------------------------------
+def make_ctx(mesh, mode: str) -> ParallelCtx:
+    return ParallelCtx(
+        mesh=mesh,
+        dp_axes=dp_axes(mesh),
+        tp_axis=tp_axis(mesh),
+        seq_shard_cache=(mode == "decode"),
+    )
+
+
+def batch_dp(mesh, global_batch: int):
+    """The dp axes actually usable for this batch size (None if B too small)."""
+    axes = dp_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and global_batch % n == 0:
+        return axes
+    # try data-only (drop pod)
+    if "data" in axes and global_batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def _loss_fn(params, tokens, targets, cfg, rcfg: RunConfig, ctx, prefix,
+             dims, dtype=jnp.bfloat16):
+    logits, aux, _ = forward_seq(
+        params, tokens, cfg, tp=ctx.tp if ctx else 1,
+        ctx=ctx, remat=rcfg.remat, block_kv=rcfg.attn_block_kv,
+        prefix_embeds=prefix, dtype=dtype)
+    logits = logits[:, -targets.shape[1]:]  # skip prefix positions
+    ls = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(ls, targets[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    return loss + 0.01 * aux, loss
+
+
+# ---------------------------------------------------------------------------
+# TRAIN
+# ---------------------------------------------------------------------------
+def build_train_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
+    """Returns (step_fn, in_shardings, out_shardings, arg_shapes).
+
+    step_fn(params, opt_state, tokens, targets, step) -> (params, opt_state,
+    metrics). Gradient accumulation over microbatches via lax.scan; the
+    DP/FSDP reductions are XLA-inserted from the shardings, except with
+    grad_compression='int8_ag' where the cross-pod reduction is explicit
+    (shard_map) int8-compressed.
+    """
+    ctx = make_ctx(mesh, "train")
+    dims = model_dims(cfg, ctx.tp)
+    B, S = rcfg.global_batch, rcfg.seq_len
+    dp = batch_dp(mesh, B)
+    dp_n = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    micro = rcfg.microbatch or dp_n  # default: 1 sample per dp shard
+    assert B % micro == 0
+    n_micro = B // micro
+    adamw = AdamWConfig(grad_clip=rcfg.grad_clip)
+
+    prefix_n = cfg.num_prefix_embeds
+    S_tok = S - prefix_n  # frontend stub occupies prefix positions
+
+    compress = (rcfg.grad_compression == "int8_ag" and dp is not None
+                and "pod" in dp)
+
+    def accum_grads(p_bf16, tok_m, tgt_m, pre_m):
+        """Microbatch-accumulated grads (f32) + mean loss."""
+        def micro_fn(acc, xs):
+            tok, tgt, pre = xs
+            (l, _), g = jax.value_and_grad(
+                lambda p: _loss_fn(p, tok, tgt, cfg, rcfg, ctx, pre, dims),
+                has_aux=True)(p_bf16)
+            acc_g, acc_l = acc
+            return (jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 acc_g, g), acc_l + l), None
+
+        g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p_bf16)
+        nm = tok_m.shape[0]
+        (grads, loss_sum), _ = jax.lax.scan(micro_fn, (g0, jnp.float32(0)),
+                                            (tok_m, tgt_m, pre_m))
+        return (jax.tree.map(lambda g: g / nm, grads), loss_sum / nm)
+
+    def accum_grads_podwise(p_bf16, tok_m, tgt_m, pre_m):
+        """Pod axis manual: local grads, then an EXPLICIT int8-compressed
+        cross-pod all-reduce (the all-gather half rides int8)."""
+        npod = mesh.shape["pod"]
+
+        def inner(p, tok, tgt, pre):
+            g, l = accum_grads(p, tok, tgt, pre)
+            g = compressed_psum(jax.tree.map(lambda x: x / npod, g), ("pod",))
+            return g, jax.lax.pmean(l, "pod")
+
+        p_specs = jax.tree.map(lambda _: P(), p_bf16)
+        g_specs = jax.tree.map(lambda _: P(), p_bf16)
+        data_spec = P(None, "pod", None)
+        pre_spec = P(None, "pod", None, None)
+        f = jax.shard_map(inner, mesh=mesh, axis_names={"pod"},
+                          in_specs=(p_specs, data_spec, data_spec, pre_spec),
+                          out_specs=(g_specs, P()), check_vma=False)
+        return f(p_bf16, tok_m, tgt_m, pre_m)
+
+    def step_fn(params, opt_state, tokens, targets, prefix, step):
+        p_bf16 = jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 and x.ndim >= 2 else x,
+            params)
+        tok_m = tokens.reshape(n_micro, micro, S_tok)
+        tgt_m = targets.reshape(n_micro, micro, S_tok)
+        pre_m = prefix.reshape(n_micro, micro, prefix_n, cfg.d_model)
+        if dp:
+            shard = NamedSharding(mesh, P(None, dp, None))
+            tok_m = jax.lax.with_sharding_constraint(tok_m, shard)
+            tgt_m = jax.lax.with_sharding_constraint(tgt_m, shard)
+            pre_m = jax.lax.with_sharding_constraint(
+                pre_m, NamedSharding(mesh, P(None, dp, None, None)))
+        if compress:
+            grads, loss = accum_grads_podwise(p_bf16, tok_m, tgt_m, pre_m)
+        else:
+            grads, loss = accum_grads(p_bf16, tok_m, tgt_m, pre_m)
+
+        lr = warmup_cosine(step, rcfg.learning_rate, rcfg.warmup_steps, 10_000)
+        params, opt_state, om = apply_updates(params, grads, opt_state, lr, adamw)
+        metrics = {"loss": loss, "lr": lr, **om}
+        return params, opt_state, metrics
+
+    # --- shardings
+    pshape = jax.eval_shape(
+        lambda k: init_params(k, cfg, tp=ctx.tp), jax.random.PRNGKey(0))
+    p_shard = SH.params_shardings(pshape, mesh, fsdp=rcfg.fsdp, moe="tp")
+    o_shard = {"m": p_shard, "v": p_shard,
+               "step": NamedSharding(mesh, P())}
+    tok_shard = NamedSharding(mesh, P(dp, None))
+    pre_shard = NamedSharding(mesh, P(dp, None, None))
+    scalar = NamedSharding(mesh, P())
+    # host-fed data args stay auto-sharded at the jit boundary (constraints
+    # inside pin them); the dry-run's abstract args carry shardings instead.
+    in_shardings = (p_shard, o_shard, None, None, None, None)
+    out_shardings = (p_shard, o_shard,
+                     jax.tree.map(lambda _: scalar,
+                                  {"loss": 0, "lr": 0, "grad_norm": 0}))
+    arg_shapes = dict(
+        params=pshape,
+        opt_state=jax.eval_shape(init_state, pshape),
+        tokens=jax.ShapeDtypeStruct((B, S_tok), jnp.int32, sharding=tok_shard),
+        targets=jax.ShapeDtypeStruct((B, S_tok), jnp.int32, sharding=tok_shard),
+        prefix=jax.ShapeDtypeStruct((B, prefix_n, cfg.d_model), jnp.float32,
+                                    sharding=pre_shard),
+        step=jax.ShapeDtypeStruct((), jnp.int32, sharding=scalar),
+    )
+    jitted = jax.jit(step_fn, in_shardings=in_shardings,
+                     out_shardings=out_shardings,
+                     donate_argnums=(0, 1))
+    return jitted, arg_shapes, dict(params=p_shard, opt_state=o_shard,
+                                    tokens=tok_shard, targets=tok_shard,
+                                    prefix=pre_shard, step=scalar)
+
+
+# ---------------------------------------------------------------------------
+# SERVE: prefill + decode
+# ---------------------------------------------------------------------------
+def quantized_param_shapes(cfg: ModelConfig, rcfg: RunConfig, tp: int):
+    """Abstract shapes of the serving params (quantized per policy)."""
+    def build(k):
+        p = init_params(k, cfg, tp=tp)
+        p = jax.tree.map(lambda x: x.astype(jnp.bfloat16)
+                         if x.ndim >= 2 else x, p)
+        if rcfg.quantized:
+            p = quantize_params(p, rcfg.quant)
+        return p
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def build_prefill_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
+    ctx = make_ctx(mesh, "prefill")
+    dims = model_dims(cfg, ctx.tp)
+    B, S = rcfg.global_batch, rcfg.seq_len
+    dp = batch_dp(mesh, B)
+    prefix_n = cfg.num_prefix_embeds
+    S_tok = S - prefix_n
+    policy = rcfg.quant if rcfg.quantized else None
+
+    def prefill_fn(params, tokens, prefix):
+        logits, _, cache = forward_seq(
+            params, tokens, cfg, tp=ctx.tp, policy=policy, ctx=ctx,
+            remat=False, block_kv=rcfg.attn_block_kv,
+            prefix_embeds=prefix if prefix_n else None,
+            want_cache=True, dtype=jnp.bfloat16)
+        return logits[:, -1], cache
+
+    pshape = quantized_param_shapes(cfg, rcfg, ctx.tp)
+    p_shard = SH.params_shardings(pshape, mesh, fsdp=False)
+    tok_shard = NamedSharding(mesh, P(dp, None))
+    pre_shard = NamedSharding(mesh, P(dp, None, None))
+    cache_shape = jax.eval_shape(
+        lambda: make_cache(cfg, B, S, tp=ctx.tp, dtype=jnp.bfloat16))
+    c_shard = SH.cache_shardings(cache_shape, mesh, dp=dp, seq_shard=True)
+    out_shardings = (NamedSharding(mesh, P(dp, "model")), c_shard)
+    jitted = jax.jit(prefill_fn,
+                     in_shardings=(p_shard, None, None),
+                     out_shardings=out_shardings)
+    arg_shapes = dict(
+        params=pshape,
+        tokens=jax.ShapeDtypeStruct((B, S_tok), jnp.int32, sharding=tok_shard),
+        prefix=jax.ShapeDtypeStruct((B, prefix_n, cfg.d_model), jnp.float32,
+                                    sharding=pre_shard),
+    )
+    return jitted, arg_shapes, dict(params=p_shard, tokens=tok_shard,
+                                    prefix=pre_shard)
+
+
+def build_serve_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
+    """One decode step: (params, token [B], cache, pos) -> (logits, cache)."""
+    ctx = make_ctx(mesh, "decode")
+    B, S = rcfg.global_batch, rcfg.seq_len
+    dp = batch_dp(mesh, B)
+    policy = rcfg.quant if rcfg.quantized else None
+
+    def serve_fn(params, token, cache, pos):
+        return decode_step(params, token, cache, pos, cfg, tp=ctx.tp,
+                           policy=policy, ctx=ctx, dtype=jnp.bfloat16)
+
+    pshape = quantized_param_shapes(cfg, rcfg, ctx.tp)
+    p_shard = SH.params_shardings(pshape, mesh, fsdp=False)
+    cache_shape = jax.eval_shape(
+        lambda: make_cache(cfg, B, S, tp=ctx.tp, dtype=jnp.bfloat16))
+    c_shard = SH.cache_shardings(cache_shape, mesh, dp=dp, seq_shard=True)
+    tok_shard = NamedSharding(mesh, P(dp))
+    scalar = NamedSharding(mesh, P())
+    jitted = jax.jit(
+        serve_fn,
+        in_shardings=(p_shard, None, c_shard, None),
+        out_shardings=(NamedSharding(mesh, P(dp, "model")), c_shard),
+        donate_argnums=(2,),
+    )
+    arg_shapes = dict(
+        params=pshape,
+        token=jax.ShapeDtypeStruct((B,), jnp.int32, sharding=tok_shard),
+        cache=cache_shape,
+        pos=jax.ShapeDtypeStruct((), jnp.int32,
+                                 sharding=NamedSharding(mesh, P())),
+    )
+    return jitted, arg_shapes, dict(params=p_shard, token=tok_shard,
+                                    cache=c_shard, pos=scalar)
+
+
+def build_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
+    if rcfg.mode == "train":
+        return build_train_step(mesh, cfg, rcfg)
+    if rcfg.mode == "prefill":
+        return build_prefill_step(mesh, cfg, rcfg)
+    if rcfg.mode == "decode":
+        return build_serve_step(mesh, cfg, rcfg)
+    raise ValueError(rcfg.mode)

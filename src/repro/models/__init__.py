@@ -1,0 +1,11 @@
+"""Model zoo: generic decoder assembly covering all assigned families."""
+
+from .common import model_dims, quantize_params  # noqa: F401
+from .parallel import NO_CTX, ParallelCtx  # noqa: F401
+from .transformer import (  # noqa: F401
+    decode_step,
+    forward_seq,
+    init_params,
+    layer_pattern,
+    make_cache,
+)

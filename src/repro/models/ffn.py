@@ -1,0 +1,35 @@
+"""Dense FFN variants: SwiGLU / GeGLU / plain GELU MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_linear, make_linear
+
+
+def init_ffn(key, d_model: int, d_ff: int, activation: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if activation.endswith("_glu"):
+        return {
+            "w_gate": make_linear(ks[0], d_model, d_ff, dtype=dtype),
+            "w_up": make_linear(ks[1], d_model, d_ff, dtype=dtype),
+            "w_down": make_linear(ks[2], d_ff, d_model, dtype=dtype),
+        }
+    return {
+        "w_up": make_linear(ks[0], d_model, d_ff, dtype=dtype),
+        "w_down": make_linear(ks[1], d_ff, d_model, dtype=dtype),
+    }
+
+
+def _act(name: str):
+    return jax.nn.silu if name.startswith("silu") else jax.nn.gelu
+
+
+def ffn_apply(p, x, activation: str, policy=None):
+    if "w_gate" in p:
+        g = _act(activation)(apply_linear(p["w_gate"], x, policy))
+        u = apply_linear(p["w_up"], x, policy)
+        return apply_linear(p["w_down"], g * u, policy)
+    h = _act(activation)(apply_linear(p["w_up"], x, policy))
+    return apply_linear(p["w_down"], h, policy)

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN: top-k router + experts, EP over the model axis.
+
+Two execution paths with identical math (tested against each other):
+
+  * ``moe_dense``  — every expert computed on every token, combined with the
+    (sparse) gate matrix. Exact; used on small configs / unit tests and as
+    the oracle for the EP path.
+  * ``moe_ep``     — production path. shard_map over the `model` axis: each
+    device holds E/tp experts; it gathers its top-C local tokens (capacity
+    dropping, MaxText-style), runs its expert FFN, scatters back weighted by
+    the gate, and a psum over the model axis combines the top-k partial sums.
+    Activations stay sharded over data axes throughout (partial shard_map).
+
+Router runs in f32 and is never quantized (policy excludes 'router').
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import apply_linear, make_linear
+from .ffn import ffn_apply, init_ffn
+from .parallel import ParallelCtx
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    E = cfg.num_experts
+    ks = jax.random.split(key, 3)
+    expert_keys = jax.random.split(ks[0], E)
+    experts = jax.vmap(
+        lambda k: init_ffn(k, cfg.d_model, cfg.d_ff, cfg.ffn_activation, dtype)
+    )(expert_keys)
+    p = {
+        "router": make_linear(ks[1], cfg.d_model, E, dtype=jnp.float32),
+        "experts": experts,  # leaves stacked [E, ...]
+    }
+    if cfg.moe_shared_expert_ff:
+        p["shared"] = init_ffn(ks[2], cfg.d_model, cfg.moe_shared_expert_ff,
+                               cfg.ffn_activation, dtype)
+    return p
+
+
+def _gates(p, x, cfg):
+    """softmax router + top-k: returns dense [T, E] combine weights."""
+    logits = apply_linear(p["router"], x.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_v, top_i = jax.lax.top_k(probs, cfg.experts_per_token)
+    top_v = top_v / jnp.maximum(top_v.sum(-1, keepdims=True), 1e-9)  # renorm
+    combine = jnp.zeros_like(probs)
+    combine = combine.at[
+        jnp.arange(x.shape[0])[:, None], top_i
+    ].set(top_v.astype(jnp.float32))
+    return combine, probs
+
+
+def load_balance_loss(combine: jnp.ndarray, probs: jnp.ndarray, E: int):
+    """Switch-style aux loss: E * <f_e> . <p_e>."""
+    frac = (combine > 0).astype(jnp.float32).mean(axis=0)
+    imp = probs.mean(axis=0)
+    return E * jnp.sum(frac * imp)
+
+
+def moe_dense(p, x, cfg, policy=None):
+    """Exact dense-combine MoE. x: [B, S, D] -> ([B, S, D], aux_loss)."""
+    B, S, D = x.shape
+    xf = x.reshape(B * S, D)
+    combine, probs = _gates(p, xf, cfg)  # [T, E]
+
+    def one_expert(ep):
+        return ffn_apply(ep, xf, cfg.ffn_activation, policy)  # [T, D]
+
+    ys = jax.vmap(one_expert)(p["experts"])  # [E, T, D]
+    y = jnp.einsum("te,etd->td", combine.astype(ys.dtype), ys)
+    aux = load_balance_loss(combine, probs, cfg.num_experts)
+    if "shared" in p:
+        y = y + ffn_apply(p["shared"], xf, cfg.ffn_activation, policy)
+    return y.reshape(B, S, D).astype(x.dtype), aux
+
+
+def moe_ep(p, x, cfg, ctx: ParallelCtx, policy=None):
+    """Expert-parallel MoE (shard_map over ctx.tp_axis). x: [B, S, D]."""
+    B, S, D = x.shape
+    E, topk = cfg.num_experts, cfg.experts_per_token
+    tp = ctx.tp
+    assert E % tp == 0, f"num_experts={E} must divide over tp={tp}"
+    e_loc = E // tp
+
+    def inner(xf, router, experts):
+        # xf: [T, D] local tokens (data axes remain auto-sharded);
+        # experts: leaves [e_loc, ...]
+        T = xf.shape[0]
+        cap = min(T, max(1, math.ceil(T * topk / E * cfg.moe_capacity_factor)))
+        combine, probs = _gates({"router": router}, xf, cfg)  # [T, E]
+        my0 = jax.lax.axis_index(ctx.tp_axis) * e_loc
+        y = jnp.zeros((T, D), jnp.float32)
+        for j in range(e_loc):
+            w_e = combine[:, my0 + j]                  # [T]
+            _, order = jax.lax.top_k(w_e, cap)         # top-C tokens
+            xe = xf[order]                             # [C, D]
+            ep = jax.tree.map(lambda a: a[j], experts)
+            he = ffn_apply(ep, xe, cfg.ffn_activation, policy)
+            # indices within one expert are unique -> scatter-set (its vjp is
+            # a plain gather; scatter-add's transpose trips an XLA SPMD bug)
+            y = y + jnp.zeros((T, D), jnp.float32).at[order].set(
+                he.astype(jnp.float32) * w_e[order, None])
+        y = jax.lax.psum(y, ctx.tp_axis)
+        aux = load_balance_loss(combine, probs, E)
+        return y, aux
+
+    router_spec = jax.tree.map(lambda _: P(None, None), p["router"])
+    experts_specs = jax.tree.map(
+        lambda a: P(*((ctx.tp_axis,) + (None,) * (a.ndim - 1))), p["experts"])
+    f = ctx.shard_map(
+        inner,
+        in_specs=(P(None, None), router_spec, experts_specs),
+        out_specs=(P(None, None), P()),
+    )
+    xf = x.reshape(B * S, D)
+    y, aux = f(xf, p["router"], p["experts"])
+    y = y.reshape(B, S, D).astype(x.dtype)
+    if "shared" in p:
+        y = y + ffn_apply(p["shared"], x, cfg.ffn_activation, policy)
+    return y, aux
+
+
+def moe_tp(p, x, cfg, ctx: ParallelCtx, policy=None):
+    """Expert-sequential tensor-parallel MoE (pure pjit, differentiable).
+
+    Each expert's FFN is TP-sharded over the model axis like a dense FFN;
+    experts run as a lax.scan with capacity-gathered token subsets. Used for
+    TRAINING: the shard_map EP path trips an XLA SPMD check-failure under
+    autodiff (hlo_instruction.cc "Invalid binary instruction opcode copy" —
+    see DESIGN.md §Known-workarounds); serving keeps true EP.
+    """
+    import jax.numpy as jnp
+
+    B, S, D = x.shape
+    E, topk = cfg.num_experts, cfg.experts_per_token
+    xf = x.reshape(B * S, D)
+    T = xf.shape[0]
+    cap = min(T, max(1, math.ceil(T * topk / E * cfg.moe_capacity_factor)))
+    combine, probs = _gates(p, xf, cfg)  # [T, E]
+
+    def body(y, ej):
+        ep, w_e = ej
+        _, order = jax.lax.top_k(w_e, cap)
+        xe = xf[order]
+        he = ffn_apply(ep, xe, cfg.ffn_activation, policy)
+        contrib = jnp.zeros((T, D), he.dtype).at[order].set(
+            he * w_e[order, None].astype(he.dtype))
+        return y + contrib.astype(jnp.float32), None
+
+    y0 = jnp.zeros((T, D), jnp.float32)
+    y, _ = jax.lax.scan(body, y0, (p["experts"], combine.T))
+    aux = load_balance_loss(combine, probs, E)
+    y = y.reshape(B, S, D).astype(x.dtype)
+    if "shared" in p:
+        y = y + ffn_apply(p["shared"], x, cfg.ffn_activation, policy)
+    return y, aux
+
+
+def moe_apply(p, x, cfg, ctx: Optional[ParallelCtx] = None, policy=None,
+              phase: str = "seq"):
+    if ctx is not None and ctx.mesh is not None and ctx.tp > 1:
+        if phase == "decode":
+            return moe_ep(p, x, cfg, ctx, policy)
+        return moe_tp(p, x, cfg, ctx, policy)
+    return moe_dense(p, x, cfg, policy)

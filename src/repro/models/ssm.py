@@ -1,0 +1,189 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and RG-LRU (recurrentgemma).
+
+Both are linear recurrences h_t = a_t * h_{t-1} + b_t. Training/prefill use a
+*chunked* scan — lax.scan over chunks carrying the boundary state, with an
+associative scan inside each chunk — so the materialized state tensor is
+O(B * chunk * d * n) instead of O(B * S * d * n); decode is the single-step
+recurrence (O(1) in sequence length: these are the archs that run the
+long_500k shape).
+
+Scan parameters (A_log, D, dt bias, Λ) are small and stay f32 (never
+quantized); all projections are quantizable linears.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import apply_linear, make_linear
+
+
+# ---------------------------------------------------------------- scan core
+def chunked_linear_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
+                        chunk: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t * h_{t-1} + b_t along axis 1. a, b: [B, S, ...]; h0: [B, ...].
+
+    Returns (h over all t: [B, S, ...], final state [B, ...]).
+    """
+    B, S = a.shape[:2]
+    ch = min(chunk, S)
+    nc = -(-S // ch)
+    pad = nc * ch - S
+    if pad:
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                    constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    ac = a.reshape((B, nc, ch) + a.shape[2:]).transpose((1, 0, 2) + tuple(range(3, a.ndim + 1)))
+    bc = b.reshape((B, nc, ch) + b.shape[2:]).transpose((1, 0, 2) + tuple(range(3, b.ndim + 1)))
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    def body(h, xs):
+        aj, bj = xs  # [B, ch, ...]
+        pa, pb = jax.lax.associative_scan(combine, (aj, bj), axis=1)
+        hj = pb + pa * h[:, None]
+        return hj[:, -1], hj
+
+    hN, hs = jax.lax.scan(body, h0, (ac, bc))
+    hs = hs.transpose((1, 0, 2) + tuple(range(3, b.ndim + 1)))
+    hs = hs.reshape((B, nc * ch) + b.shape[2:])
+    return hs[:, :S], hN
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray],
+                  state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: [B, S, C]; w: [width, C]; state: [B, width-1, C].
+
+    Returns (y [B, S, C], new_state [B, width-1, C]).
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xe = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # [B, S+w-1, C]
+    y = sum(xe[:, i: i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(width))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    new_state = xe[:, -(width - 1):, :] if width > 1 else state
+    return y, new_state
+
+
+# -------------------------------------------------------------------- Mamba1
+def init_mamba(key, cfg, dtype=jnp.float32):
+    D, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = cfg.dt_rank or max(1, D // 16)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": make_linear(ks[0], D, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   * (1.0 / np.sqrt(cfg.ssm_conv))).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": make_linear(ks[2], di, dt_rank + 2 * n, dtype=dtype),
+        "dt_proj": make_linear(ks[3], dt_rank, di, bias=True, dtype=dtype),
+        "A_log": jnp.log(A),           # f32 [di, n]
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": make_linear(ks[4], di, D, dtype=dtype),
+    }
+
+
+def _mamba_core(p, xc, cfg, policy):
+    """xc: [B, S, di] post-conv activations -> (da, db) scan elements."""
+    n = cfg.ssm_state
+    dt_rank = cfg.dt_rank or max(1, cfg.d_model // 16)
+    xdb = apply_linear(p["x_proj"], xc, policy)
+    dt_r = xdb[..., :dt_rank]
+    Bc = xdb[..., dt_rank: dt_rank + n]
+    Cc = xdb[..., dt_rank + n:]
+    dt = jax.nn.softplus(apply_linear(p["dt_proj"], dt_r, policy).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])  # [di, n]
+    da = jnp.exp(dt[..., None] * A[None, None])                      # [B,S,di,n]
+    db = (dt[..., None] * Bc[:, :, None, :].astype(jnp.float32)
+          * xc[..., None].astype(jnp.float32))                       # [B,S,di,n]
+    return da, db, Cc
+
+
+def mamba_train(p, x, cfg, *, policy=None, chunk=256):
+    """x: [B, S, D] -> (y [B, S, D], (conv_state, ssm_state) final)."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = apply_linear(p["in_proj"], x, policy)
+    x_in, z = xz[..., :di], xz[..., di:]
+    xc, conv_state = causal_conv1d(x_in, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    da, db, Cc = _mamba_core(p, xc, cfg, policy)
+    h0 = jnp.zeros((x.shape[0], di, n), jnp.float32)
+    hs, hN = chunked_linear_scan(da, db, h0, chunk)                  # [B,S,di,n]
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cc.astype(jnp.float32))
+    y = y + p["D"][None, None] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return apply_linear(p["out_proj"], y, policy), (conv_state, hN)
+
+
+def mamba_decode(p, x, conv_state, ssm_state, cfg, *, policy=None):
+    """x: [B, 1, D]; conv_state [B, w-1, di]; ssm_state [B, di, n] f32."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = apply_linear(p["in_proj"], x, policy)
+    x_in, z = xz[..., :di], xz[..., di:]
+    xc, conv_state = causal_conv1d(x_in, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    da, db, Cc = _mamba_core(p, xc, cfg, policy)
+    h = da[:, 0] * ssm_state + db[:, 0]                              # [B,di,n]
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0].astype(jnp.float32))
+    y = y + p["D"][None] * xc[:, 0].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+    return apply_linear(p["out_proj"], y, policy), (conv_state, h)
+
+
+# -------------------------------------------------------------------- RG-LRU
+def init_rglru(key, cfg, dtype=jnp.float32):
+    D, W = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": make_linear(ks[0], D, W, dtype=dtype),
+        "in_gate": make_linear(ks[1], D, W, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, W), jnp.float32) * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        "w_rec_gate": make_linear(ks[3], W, W, dtype=dtype),   # r_t
+        "w_in_gate": make_linear(ks[4], W, W, dtype=dtype),    # i_t
+        "lam": jnp.full((W,), 2.0, jnp.float32),               # Λ
+        "out_proj": make_linear(ks[5], W, D, dtype=dtype),
+    }
+
+
+def _rglru_elems(p, u, policy):
+    """u: [B, S, W] -> (a, b) recurrence elements, f32."""
+    r = jax.nn.sigmoid(apply_linear(p["w_rec_gate"], u, policy).astype(jnp.float32))
+    i = jax.nn.sigmoid(apply_linear(p["w_in_gate"], u, policy).astype(jnp.float32))
+    log_a = -8.0 * jax.nn.sigmoid(p["lam"])[None, None] * r       # [B,S,W]
+    a = jnp.exp(log_a)
+    gated = i * u.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    return a, b
+
+
+def rglru_train(p, x, cfg, *, policy=None, chunk=256):
+    gate = jax.nn.gelu(apply_linear(p["in_gate"], x, policy))
+    u = apply_linear(p["in_x"], x, policy)
+    u, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"])
+    a, b = _rglru_elems(p, u, policy)
+    h0 = jnp.zeros((x.shape[0], cfg.lru_width), jnp.float32)
+    hs, hN = chunked_linear_scan(a, b, h0, chunk)                  # [B,S,W]
+    y = hs.astype(x.dtype) * gate
+    return apply_linear(p["out_proj"], y, policy), (conv_state, hN)
+
+
+def rglru_decode(p, x, conv_state, rec_state, cfg, *, policy=None):
+    gate = jax.nn.gelu(apply_linear(p["in_gate"], x, policy))
+    u = apply_linear(p["in_x"], x, policy)
+    u, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+    a, b = _rglru_elems(p, u, policy)
+    h = a[:, 0] * rec_state + b[:, 0]                              # [B,W]
+    y = h[:, None].astype(x.dtype) * gate
+    return apply_linear(p["out_proj"], y, policy), (conv_state, h)

@@ -1,0 +1,373 @@
+"""Generic decoder assembly for all 10 assigned architecture families.
+
+A model is a repeating *pattern* of blocks (len-1 for uniform families;
+('rec','rec','attn') for recurrentgemma). Full pattern repeats are scanned
+(lax.scan over stacked params, with optional remat); the remainder layers are
+unrolled. The same block functions serve training (full-sequence), prefill
+(full-sequence + cache emission) and decode (single token + cache update),
+in either bf16 training precision or the AMS-quantized serving path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as A
+from . import ffn as F
+from . import moe as M
+from . import ssm as S
+from .common import Dims, apply_linear, make_linear, make_norm, model_dims, rms_norm
+from .parallel import ParallelCtx
+
+
+# ---------------------------------------------------------------------------
+# Pattern / init
+# ---------------------------------------------------------------------------
+def layer_pattern(cfg) -> Tuple[str, ...]:
+    if cfg.family == "hybrid":
+        return cfg.block_pattern
+    if cfg.family == "ssm":
+        return ("mamba",)
+    if cfg.family == "moe":
+        return ("gqa_moe",)
+    if cfg.attention == "mla":
+        return ("mla",)
+    return ("gqa",)
+
+
+def init_block(key, cfg, dims: Dims, kind: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if kind == "mamba":
+        return {"ln1": make_norm(cfg.d_model, dtype),
+                "mixer": S.init_mamba(ks[0], cfg, dtype)}
+    if kind == "rec":
+        return {"ln1": make_norm(cfg.d_model, dtype),
+                "mixer": S.init_rglru(ks[0], cfg, dtype),
+                "ln2": make_norm(cfg.d_model, dtype),
+                "ffn": F.init_ffn(ks[1], cfg.d_model, cfg.d_ff,
+                                  cfg.ffn_activation, dtype)}
+    if kind == "mla":
+        return {"ln1": make_norm(cfg.d_model, dtype),
+                "attn": A.init_mla(ks[0], cfg, dims, dtype),
+                "ln2": make_norm(cfg.d_model, dtype),
+                "ffn": F.init_ffn(ks[1], cfg.d_model, cfg.d_ff,
+                                  cfg.ffn_activation, dtype)}
+    if kind == "gqa_moe":
+        return {"ln1": make_norm(cfg.d_model, dtype),
+                "attn": A.init_gqa(ks[0], cfg, dims, dtype),
+                "ln2": make_norm(cfg.d_model, dtype),
+                "moe": M.init_moe(ks[1], cfg, dtype)}
+    if kind in ("gqa", "attn"):
+        return {"ln1": make_norm(cfg.d_model, dtype),
+                "attn": A.init_gqa(ks[0], cfg, dims, dtype),
+                "ln2": make_norm(cfg.d_model, dtype),
+                "ffn": F.init_ffn(ks[1], cfg.d_model, cfg.d_ff,
+                                  cfg.ffn_activation, dtype)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def init_params(key, cfg, tp: int = 1, dtype=jnp.float32):
+    """Full parameter pytree. Pattern repeats stacked [G, ...] under 'layers';
+    remainder blocks unrolled under 'tail'."""
+    dims = model_dims(cfg, tp)
+    pat = layer_pattern(cfg)
+    L, Pn = cfg.num_layers, len(pat)
+    G, R = L // Pn, L % Pn
+    k_emb, k_layers, k_tail, k_head = jax.random.split(key, 4)
+
+    def init_group(k):
+        kk = jax.random.split(k, Pn)
+        return {f"sub{i}": init_block(kk[i], cfg, dims, pat[i], dtype)
+                for i in range(Pn)}
+
+    params: Dict[str, Any] = {
+        "embed": {"w": (jax.random.normal(k_emb, (dims.V, cfg.d_model),
+                                          jnp.float32) * 0.02).astype(dtype)},
+        "layers": jax.vmap(init_group)(jax.random.split(k_layers, G)),
+        "final_norm": make_norm(cfg.d_model, dtype),
+        "lm_head": make_linear(k_head, cfg.d_model, dims.V, dtype=dtype),
+    }
+    if R:
+        kk = jax.random.split(k_tail, R)
+        params["tail"] = {f"sub{i}": init_block(kk[i], cfg, dims, pat[i], dtype)
+                          for i in range(R)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application — full sequence (train / prefill)
+# ---------------------------------------------------------------------------
+def block_seq(p, x, kind, cfg, dims, *, policy=None, ctx: Optional[ParallelCtx],
+              block_kv=1024, prefix_len=0, want_cache=False):
+    """Returns (x, aux_loss, cache_or_None)."""
+    aux = jnp.float32(0)
+    cache = None
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "mamba":
+        out, (conv_st, ssm_st) = S.mamba_train(p["mixer"], h, cfg, policy=policy)
+        x = x + out
+        if want_cache:
+            cache = {"conv": conv_st, "ssm": ssm_st}
+        return x, aux, cache
+    if kind == "rec":
+        out, (conv_st, rec_st) = S.rglru_train(p["mixer"], h, cfg, policy=policy)
+        x = x + out
+        if want_cache:
+            cache = {"conv": conv_st, "state": rec_st}
+    elif kind == "mla":
+        out, kv = A.mla_attn_train(p["attn"], h, cfg, dims, policy=policy,
+                                   block_kv=block_kv, prefix_len=prefix_len)
+        x = x + out
+        if want_cache:
+            cache = {"kv": kv[:, :, None, :]}
+    else:  # gqa / attn / gqa_moe
+        window = cfg.sliding_window if kind == "attn" else 0
+        out, (k, v) = A.gqa_attn_train(p["attn"], h, cfg, dims, policy=policy,
+                                       block_kv=block_kv, prefix_len=prefix_len,
+                                       window=window)
+        x = x + out
+        if want_cache:
+            if window:
+                k, v = (_to_ring(t, window) for t in (k, v))
+            cache = {"k": k, "v": v}
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "gqa_moe":
+        y, aux = M.moe_apply(p["moe"], h2, cfg, ctx, policy, phase="seq")
+        x = x + y
+    else:
+        x = x + F.ffn_apply(p["ffn"], h2, cfg.ffn_activation, policy)
+    return x, aux, cache
+
+
+def _to_ring(kv: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Last `window` entries of [B, S, kv, hd] laid out by position % window."""
+    B, Skv = kv.shape[0], kv.shape[1]
+    W = min(window, Skv)
+    tail = kv[:, Skv - W:]
+    idx = (jnp.arange(Skv - W, Skv)) % window
+    ring = jnp.zeros((B, window) + kv.shape[2:], kv.dtype)
+    return ring.at[:, idx].set(tail)
+
+
+# ---------------------------------------------------------------------------
+# Block application — single-token decode
+# ---------------------------------------------------------------------------
+def _seq_core_wrap(ctx: ParallelCtx, n_caches: int):
+    """shard_map wrapper for the insert+attend core with seq-sharded cache."""
+    tp = ctx.tp_axis
+    if n_caches == 2:  # gqa: (q, k_new, v_new, ck, cv, pos)
+        in_specs = (P(None, None, None), P(None, None, None, None),
+                    P(None, None, None, None),
+                    P(None, tp, None, None), P(None, tp, None, None), P())
+        out_specs = (P(None, None, None),
+                     P(None, tp, None, None), P(None, tp, None, None))
+    else:  # mla: (q_eff, kv_new, cache, pos)
+        in_specs = (P(None, None, None), P(None, None, None, None),
+                    P(None, tp, None, None), P())
+        out_specs = (P(None, None, None), P(None, tp, None, None))
+
+    def wrap(core):
+        return ctx.shard_map(functools.partial(core, axis_name=tp),
+                             in_specs=in_specs, out_specs=out_specs)
+    return wrap
+
+
+def block_decode(p, x, cache, pos, kind, cfg, dims, *, policy=None,
+                 ctx: Optional[ParallelCtx]):
+    """x: [B, 1, D]. Returns (x, new_cache)."""
+    seq_sharded = ctx is not None and ctx.mesh is not None and ctx.seq_shard_cache
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "mamba":
+        out, (conv_st, ssm_st) = S.mamba_decode(
+            p["mixer"], h, cache["conv"], cache["ssm"], cfg, policy=policy)
+        return x + out, {"conv": conv_st, "ssm": ssm_st}
+    if kind == "rec":
+        out, (conv_st, rec_st) = S.rglru_decode(
+            p["mixer"], h, cache["conv"], cache["state"], cfg, policy=policy)
+        x = x + out
+        cache = {"conv": conv_st, "state": rec_st}
+    elif kind == "mla":
+        wrap = _seq_core_wrap(ctx, 1) if seq_sharded else None
+        out, ckv = A.mla_attn_decode(p["attn"], h, cache["kv"], pos, cfg, dims,
+                                     policy=policy, core_wrap=wrap)
+        x = x + out
+        cache = {"kv": ckv}
+    else:
+        window = cfg.sliding_window if kind == "attn" else 0
+        wrap = _seq_core_wrap(ctx, 2) if seq_sharded else None
+        out, (ck, cv) = A.gqa_attn_decode(
+            p["attn"], h, cache["k"], cache["v"], pos, cfg, dims,
+            policy=policy, core_wrap=wrap, window=window, ring=bool(window))
+        x = x + out
+        cache = {"k": ck, "v": cv}
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "gqa_moe":
+        y, _ = M.moe_apply(p["moe"], h2, cfg, ctx, policy, phase="decode")
+        x = x + y
+    else:
+        x = x + F.ffn_apply(p["ffn"], h2, cfg.ffn_activation, policy)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+def block_cache_shape(cfg, dims: Dims, kind: str, B: int, cap: int, dtype):
+    if kind == "mamba":
+        return {"conv": jnp.zeros((B, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+                "ssm": jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32)}
+    if kind == "rec":
+        return {"conv": jnp.zeros((B, 3, cfg.lru_width), dtype),
+                "state": jnp.zeros((B, cfg.lru_width), jnp.float32)}
+    if kind == "mla":
+        c = cfg.kv_lora_rank + cfg.qk_rope_dim
+        return {"kv": jnp.zeros((B, cap, 1, c), dtype)}
+    S_cap = min(cap, cfg.sliding_window) if (kind == "attn" and cfg.sliding_window) else cap
+    if kind == "attn" and cfg.sliding_window:
+        S_cap = cfg.sliding_window
+    return {"k": jnp.zeros((B, S_cap, dims.kv, dims.hd), dtype),
+            "v": jnp.zeros((B, S_cap, dims.kv, dims.hd), dtype)}
+
+
+def make_cache(cfg, B: int, cap: int, tp: int = 1, dtype=jnp.bfloat16):
+    """Zero-initialized cache pytree matching the params layout."""
+    dims = model_dims(cfg, tp)
+    pat = layer_pattern(cfg)
+    L, Pn = cfg.num_layers, len(pat)
+    G, R = L // Pn, L % Pn
+
+    def group():
+        return {f"sub{i}": block_cache_shape(cfg, dims, pat[i], B, cap, dtype)
+                for i in range(Pn)}
+
+    cache = {"layers": jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (G,) + a.shape).copy() if G else a, group())}
+    if R:
+        cache["tail"] = {f"sub{i}": block_cache_shape(cfg, dims, pat[i], B, cap, dtype)
+                         for i in range(R)}
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Full model: train forward / prefill / decode
+# ---------------------------------------------------------------------------
+def _embed(params, tokens, cfg, dims, prefix_embeds=None, dtype=jnp.bfloat16,
+           ctx: Optional[ParallelCtx] = None):
+    x = params["embed"]["w"].astype(dtype)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    return _constrain_batch(x, ctx)
+
+
+def _constrain_batch(x, ctx: Optional[ParallelCtx]):
+    """Pin the batch dim to the DP axes after the embedding gather.
+
+    The gather of a model-sharded embedding table with data-sharded indices
+    loses the batch sharding in SPMD propagation — without this constraint
+    the whole model body runs replicated over `data` (measured: 16x
+    redundant flops on every train cell)."""
+    if ctx is None or ctx.mesh is None or not ctx.dp_axes:
+        return x
+    import numpy as np
+    n = int(np.prod([ctx.mesh.shape[a] for a in ctx.dp_axes]))
+    if x.shape[0] % n != 0:
+        return x
+    spec = P(*((ctx.dp_axes,) + (None,) * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, spec))
+
+
+def _head(params, x, cfg, dims, policy=None):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = apply_linear(params["lm_head"], x, policy)
+    return logits.astype(jnp.float32) + dims.vocab_mask_bias[None, None, :]
+
+
+def forward_seq(params, tokens, cfg, *, tp=1, policy=None, ctx=None,
+                remat=True, block_kv=1024, prefix_embeds=None,
+                want_cache=False, dtype=jnp.bfloat16):
+    """Full-sequence forward. Returns (logits, aux, cache_or_None).
+
+    train: want_cache=False; prefill: want_cache=True (logits for last token
+    come from the same pass)."""
+    dims = model_dims(cfg, tp)
+    pat = layer_pattern(cfg)
+    L, Pn = cfg.num_layers, len(pat)
+    G, R = L // Pn, L % Pn
+    prefix_len = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+    x = _embed(params, tokens, cfg, dims, prefix_embeds, dtype, ctx=ctx)
+
+    def group_fn(carry, gp):
+        x, aux = carry
+        caches = {}
+        for i in range(Pn):
+            x, a, c = block_seq(gp[f"sub{i}"], x, pat[i], cfg, dims,
+                                policy=policy, ctx=ctx, block_kv=block_kv,
+                                prefix_len=prefix_len, want_cache=want_cache)
+            aux = aux + a
+            if want_cache:
+                caches[f"sub{i}"] = c
+        return (x, aux), (caches if want_cache else None)
+
+    fn = jax.checkpoint(group_fn) if remat else group_fn
+    (x, aux), layer_caches = jax.lax.scan(fn, (x, jnp.float32(0)),
+                                          params["layers"])
+    cache = {"layers": layer_caches} if want_cache else None
+    if R:
+        tail_caches = {}
+        for i in range(R):
+            x, a, c = block_seq(params["tail"][f"sub{i}"], x, pat[i], cfg, dims,
+                                policy=policy, ctx=ctx, block_kv=block_kv,
+                                prefix_len=prefix_len, want_cache=want_cache)
+            aux = aux + a
+            if want_cache:
+                tail_caches[f"sub{i}"] = c
+        if want_cache:
+            cache["tail"] = tail_caches
+    logits = _head(params, x, cfg, dims, policy)
+    return logits, aux, cache
+
+
+def decode_step(params, token, cache, pos, cfg, *, tp=1, policy=None,
+                ctx=None, dtype=jnp.bfloat16):
+    """One decode step. token: [B] int32; pos: scalar int32 (insert position).
+
+    Returns (logits [B, V], new cache)."""
+    dims = model_dims(cfg, tp)
+    pat = layer_pattern(cfg)
+    L, Pn = cfg.num_layers, len(pat)
+    G, R = L // Pn, L % Pn
+    x = _embed(params, token[:, None], cfg, dims, None, dtype, ctx=ctx)
+
+    # Caches ride the scan xs/ys (slice in, updated slice out). We also
+    # tried carrying the stacked cache and updating per-layer slices in
+    # place — it measured 2.3x WORSE (XLA rematerializes the carried-buffer
+    # slices; scan's native xs/ys streaming is already the cheaper path).
+    # See EXPERIMENTS.md §Perf (refuted iteration).
+    def group_fn(x, xs):
+        gp, gcache = xs
+        new_caches = {}
+        for i in range(Pn):
+            x, nc = block_decode(gp[f"sub{i}"], x, gcache[f"sub{i}"], pos,
+                                 pat[i], cfg, dims, policy=policy, ctx=ctx)
+            new_caches[f"sub{i}"] = nc
+        return x, new_caches
+
+    x, new_layer_caches = jax.lax.scan(group_fn, x,
+                                       (params["layers"], cache["layers"]))
+    new_cache = {"layers": new_layer_caches}
+    if R:
+        tails = {}
+        for i in range(R):
+            x, nc = block_decode(params["tail"][f"sub{i}"], x,
+                                 cache["tail"][f"sub{i}"], pos, pat[i], cfg,
+                                 dims, policy=policy, ctx=ctx)
+            tails[f"sub{i}"] = nc
+        new_cache["tail"] = tails
+    logits = _head(params, x, cfg, dims, policy)
+    return logits[:, 0], new_cache

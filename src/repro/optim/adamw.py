@@ -1,0 +1,85 @@
+"""AdamW with decoupled weight decay + global-norm clipping (from scratch).
+
+State layout mirrors the param pytree: {m, v} in f32 plus an i32 step.
+Master params are f32; the training loop computes grads in bf16 compute /
+f32 accumulate and applies updates to the f32 masters (mixed-precision
+recipe). With FSDP, m/v inherit the parameter sharding, i.e. optimizer
+state is sharded over (data x model) — ZeRO-ish for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_state(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def _decayable(path) -> bool:
+    """Decay 2D+ matrices; skip norms/biases/scalars (standard practice)."""
+    last = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    return last == "w"
+
+
+def apply_updates(params, grads, state, lr, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(path, p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decayable(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    g_leaves = jax.tree.leaves(grads)
+    m_leaves = jax.tree.leaves(state["m"])
+    v_leaves = jax.tree.leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat, g_leaves, m_leaves, v_leaves):
+        np_, nm, nv = upd(path, p, g, m, v)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    params = jax.tree.unflatten(treedef, new_p)
+    new_state = {"m": jax.tree.unflatten(treedef, new_m),
+                 "v": jax.tree.unflatten(treedef, new_v),
+                 "step": step}
+    return params, new_state, {"grad_norm": gn}

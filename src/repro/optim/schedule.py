@@ -1,0 +1,14 @@
+"""LR schedules: linear warmup + cosine decay (the usual LLM recipe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = base_lr * jnp.minimum(1.0, (step + 1) / max(1, warmup))
+    prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, base_lr * cos)

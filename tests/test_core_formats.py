@@ -1,0 +1,62 @@
+"""Unit tests for FP format definitions and decode."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats
+from repro.core.formats import SCHEMES, code_to_value, get_format, mag_table
+
+
+def test_paper_table1_e2m3():
+    f = get_format("e2m3")
+    assert f.bias == 1
+    assert f.max_normal == 7.5
+    # min normal S 001 000 = 2^0 * 1.0
+    assert f.decode_mag(np.array([0b001000]))[0] == 1.0
+    # max subnormal S 000 111 = 2^-1 * 0.875 wait: paper lists m=2 variant;
+    # e2m3 subnormal max = 2^(1-1) * 7/8 = 0.875
+    assert f.decode_mag(np.array([0b000111]))[0] == 0.875
+    assert f.min_subnormal == 0.125
+
+
+def test_paper_table1_e3m2():
+    f = get_format("e3m2")
+    assert f.bias == 3
+    assert f.max_normal == 28.0
+    assert f.decode_mag(np.array([0b00100]))[0] == 0.25  # min normal
+    assert f.decode_mag(np.array([0b00011]))[0] == 0.1875  # max subnormal
+    assert f.min_subnormal == 0.0625
+
+
+def test_mag_table_monotone_all_formats():
+    for f in formats.FORMATS.values():
+        t = mag_table(f)
+        assert np.all(np.diff(t) > 0)
+        assert t[0] == 0.0
+        assert t[-1] == np.float32(f.max_normal)
+
+
+def test_code_to_value_matches_numpy_decode():
+    for f in formats.FORMATS.values():
+        mags = np.arange(f.num_mag_codes)
+        # positive
+        v = np.asarray(code_to_value(f, jnp.asarray(mags)))
+        np.testing.assert_allclose(v, f.decode_mag(mags), rtol=0)
+        # negative: set sign bit
+        vneg = np.asarray(code_to_value(f, jnp.asarray(mags | (1 << f.code_bits))))
+        np.testing.assert_allclose(vneg, -f.decode_mag(mags), rtol=0)
+
+
+def test_effective_bits():
+    assert SCHEMES["fp5.33-e2m3"].effective_bits == pytest.approx(5 + 1 / 3)
+    assert SCHEMES["fp4.25-e2m2"].effective_bits == 4.25
+    assert SCHEMES["fp4.5-e2m2"].effective_bits == 4.5
+    assert SCHEMES["fp6-e2m3"].effective_bits == 6.0
+
+
+def test_no_inf_nan_anywhere():
+    for f in formats.FORMATS.values():
+        all_codes = np.arange(1 << f.total_bits)
+        v = np.asarray(code_to_value(f, jnp.asarray(all_codes)))
+        assert np.all(np.isfinite(v))

@@ -1,0 +1,201 @@
+"""Unit + property tests for RTN, AMS sharing, adaptive search, packing."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SCHEMES,
+    ams_quantize,
+    ams_quantize_dequantize,
+    code_to_value,
+    dequantize,
+    get_format,
+    get_scheme,
+    pack,
+    quantize_linear,
+    quantize_rtn,
+    unpack,
+)
+from repro.core.ams import share_mantissa
+from repro.core.qlinear import apply as qapply, dequantize_weight
+from repro.core.rtn import table_values
+
+
+def rand_w(K, N, seed=0, scale=0.02):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((K, N)).astype(np.float32) * scale)
+
+
+# ----------------------------------------------------------------- RTN ----
+def test_rtn_roundtrip_exact_on_grid():
+    """Values already on the format grid must round-trip exactly."""
+    f = get_format("e2m3")
+    vals = table_values(f)  # all representable values, scale 1
+    w = jnp.asarray(np.tile(vals[:, None], (1, 3)))
+    # force scale = 1 by adding max_normal row
+    codes, scale = quantize_rtn(w, f)
+    np.testing.assert_allclose(np.asarray(scale), 1.0)
+    wq = dequantize(codes, f, scale)
+    np.testing.assert_allclose(np.asarray(wq), np.asarray(w))
+
+
+def test_rtn_error_bounded_by_half_ulp():
+    f = get_format("e2m2")
+    w = rand_w(256, 16, seed=1)
+    codes, scale = quantize_rtn(w, f)
+    wq = np.asarray(dequantize(codes, f, scale))
+    wn = np.asarray(w) / np.asarray(scale)
+    # max gap between adjacent representable magnitudes at the top of range
+    t = np.asarray(table_values(f))
+    max_gap = np.max(np.diff(t))
+    assert np.all(np.abs(wq / np.asarray(scale) - wn) <= max_gap / 2 + 1e-6)
+
+
+def test_rtn_scale_is_per_output_channel():
+    f = get_format("e2m3")
+    w = rand_w(64, 8, seed=2)
+    w = w.at[:, 3].mul(100.0)
+    _, scale = quantize_rtn(w, f)
+    assert np.asarray(scale)[3] > 10 * np.asarray(scale)[0]
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    st.sampled_from(["e2m1", "e2m2", "e2m3", "e3m2", "e4m3"]),
+    st.integers(0, 2**31 - 1),
+)
+def test_rtn_idempotent_property(fmt_name, seed):
+    """Property: quantizing an already-quantized tensor is a fixed point."""
+    f = get_format(fmt_name)
+    w = rand_w(32, 4, seed=seed % 10_000)
+    codes, scale = quantize_rtn(w, f)
+    wq = dequantize(codes, f, scale)
+    codes2, scale2 = quantize_rtn(wq, f)
+    wq2 = dequantize(codes2, f, scale2)
+    np.testing.assert_allclose(np.asarray(wq2), np.asarray(wq), rtol=1e-6, atol=1e-9)
+
+
+# ----------------------------------------------------------------- AMS ----
+@pytest.mark.parametrize("scheme", ["fp5.33-e2m3", "fp4.5-e2m2", "fp4.33-e2m2", "fp4.25-e2m2"])
+@pytest.mark.parametrize("strategy", ["set_lsb", "requantize"])
+def test_shared_lsb_constant_within_group(scheme, strategy):
+    s = get_scheme(scheme)
+    w = rand_w(s.k * 64, 16, seed=3)
+    codes, _ = ams_quantize(w, s, strategy)
+    bits = np.asarray(codes) & 1
+    g = bits.reshape(-1, s.k, 16)
+    assert np.all(g == g[:, :1, :])
+
+
+@pytest.mark.parametrize("scheme", ["fp5.33-e2m3", "fp4.25-e2m2"])
+def test_adaptive_search_beats_fixed_lsb(scheme):
+    """Adaptive search must be no worse than forcing LSB=0 or LSB=1."""
+    s = get_scheme(scheme)
+    w = rand_w(s.k * 128, 32, seed=4)
+    wq = ams_quantize_dequantize(w, s, "set_lsb")
+    mse_adaptive = float(jnp.mean((wq - w) ** 2))
+    codes, scale = quantize_rtn(w, s.base)
+    for forced in (0, 1):
+        fc = (codes & ~jnp.int32(1)) | forced
+        mse_forced = float(jnp.mean((dequantize(fc, s.base, scale) - w) ** 2))
+        assert mse_adaptive <= mse_forced + 1e-12
+
+
+def test_requantize_no_worse_than_set_lsb():
+    for name in ("fp5.33-e2m3", "fp4.5-e2m2", "fp4.25-e2m2"):
+        s = get_scheme(name)
+        w = rand_w(s.k * 96, 24, seed=5)
+        m_set = float(jnp.mean((ams_quantize_dequantize(w, s, "set_lsb") - w) ** 2))
+        m_req = float(jnp.mean((ams_quantize_dequantize(w, s, "requantize") - w) ** 2))
+        assert m_req <= m_set + 1e-12
+
+
+def test_mse_ordering_matches_paper():
+    """Fig.3/5 ordering: fp6 <= fp5.33 <= fp5 <= fp4.5 <= fp4.25 <= fp4."""
+    w = rand_w(960, 64, seed=6)
+    order = ["fp6-e2m3", "fp5.33-e2m3", "fp5-e2m2", "fp4.5-e2m2", "fp4.25-e2m2", "fp4-e2m1"]
+    mses = [
+        float(jnp.mean((ams_quantize_dequantize(w, SCHEMES[n]) - w) ** 2))
+        for n in order
+    ]
+    assert mses == sorted(mses), dict(zip(order, mses))
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.sampled_from(["fp5.33-e2m3", "fp4.5-e2m2", "fp4.25-e2m2"]), st.integers(0, 9999))
+def test_ams_error_bounded_property(scheme_name, seed):
+    """Sharing can cost at most one LSB step per weight (requantize path)."""
+    s = get_scheme(scheme_name)
+    f = s.base
+    w = rand_w(s.k * 32, 8, seed=seed)
+    codes, scale = ams_quantize(w, s, "requantize")
+    wq = np.asarray(dequantize(codes, f, scale))
+    wn = np.abs(np.asarray(w) / np.asarray(scale))
+    t = np.asarray(table_values(f))
+    # worst case: nearest point on the coarser (every-other) sub-lattice
+    max_gap = np.max(np.diff(t[t >= 0]))  # top-of-range gap of full lattice
+    err = np.abs(wq / np.asarray(scale) - np.asarray(w) / np.asarray(scale))
+    assert np.all(err <= 2 * max_gap)  # 2x full-lattice gap = sub-lattice half-gap bound
+
+
+# ------------------------------------------------------------- packing ----
+@pytest.mark.parametrize("scheme", list(SCHEMES))
+def test_pack_unpack_roundtrip(scheme):
+    s = SCHEMES[scheme]
+    K = s.k * 3 * 32 * 4  # generous multiple
+    w = rand_w(K, 24, seed=7)
+    codes, scale = ams_quantize(w, s)
+    p = pack(codes, scale, s)
+    np.testing.assert_array_equal(np.asarray(unpack(p)), np.asarray(codes))
+
+
+def test_fp533_fused_container_bit_exact_bits():
+    s = SCHEMES["fp5.33-e2m3"]
+    from repro.core.packing import make_layout
+
+    lay = make_layout(s)
+    assert lay.container == "fp533"
+    # 6144 x 6144: exactly 16/3 bits per weight, zero waste
+    assert lay.effective_bits(6144, 6144) == pytest.approx(16 / 3)
+
+
+def test_planes_effective_bits_at_scale():
+    from repro.core.packing import make_layout
+
+    lay = make_layout(SCHEMES["fp4.25-e2m2"])
+    assert lay.effective_bits(4096, 4096) == pytest.approx(4.25)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    st.sampled_from(list(SCHEMES)),
+    st.integers(1, 300),
+    st.integers(1, 8),
+    st.integers(0, 9999),
+)
+def test_quantize_linear_handles_ragged_k(scheme_name, K, N, seed):
+    """Property: any (K, N) works — padding is an exact no-op in the matmul."""
+    s = SCHEMES[scheme_name]
+    w = rand_w(K, N, seed=seed)
+    q = quantize_linear(w, s)
+    wd = dequantize_weight(q, dtype=jnp.float32)
+    assert wd.shape == (K, N)
+    x = rand_w(4, K, seed=seed + 1, scale=1.0)
+    y = qapply(q, x, impl="ref")
+    expect = x @ wd
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), rtol=1e-5, atol=1e-6)
+
+
+def test_quantized_linear_with_bias():
+    s = SCHEMES["fp4.25-e2m2"]
+    w = rand_w(256, 32, seed=8)
+    b = jnp.arange(32, dtype=jnp.float32)
+    q = quantize_linear(w, s, bias=b)
+    x = rand_w(2, 256, seed=9, scale=1.0)
+    y = qapply(q, x)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x @ dequantize_weight(q, jnp.float32) + b),
+        rtol=1e-5, atol=1e-6,
+    )

@@ -1,0 +1,196 @@
+"""Multi-device correctness tests (8 forced host CPU devices, subprocess).
+
+Each test spawns a fresh python with XLA_FLAGS so the device count is set
+before jax initializes (process-global). Covers the distribution machinery
+the dry-run exercises at 512 devices:
+
+  * MoE: dense oracle == TP path == EP (shard_map) path
+  * flash-decode with sequence-sharded KV cache == unsharded reference
+  * int8-compressed all-reduce == plain psum (within int8 grid error)
+  * sharded train_step == single-device train_step (loss trajectory)
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(body: str, devices: int = 8, timeout: int = 420) -> str:
+    code = ("import os\n"
+            f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(body))
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env, cwd=REPO)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_moe_paths_agree():
+    run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.parallel import ParallelCtx
+    from repro.models import moe as M
+    from repro.configs import get_config
+
+    cfg = get_config('dbrx-132b').reduced(num_layers=1, num_experts=4,
+                                          experts_per_token=2, d_model=64,
+                                          d_ff=128)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)  # no drops
+    mesh = make_test_mesh((2, 4), ('data', 'model'))
+    ctx = ParallelCtx(mesh=mesh, dp_axes=('data',), tp_axis='model')
+    p = M.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 64))
+    with jax.set_mesh(mesh):
+        y_dense, aux_d = M.moe_dense(p, x, cfg)
+        y_tp, aux_t = jax.jit(lambda p, x: M.moe_tp(p, x, cfg, ctx))(p, x)
+        y_ep, aux_e = jax.jit(lambda p, x: M.moe_ep(p, x, cfg, ctx))(p, x)
+    np.testing.assert_allclose(np.asarray(y_tp), np.asarray(y_dense),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_dense),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(float(aux_t), float(aux_d), rtol=1e-5)
+    print('moe paths agree')
+    """)
+
+
+def test_flash_decode_seq_sharded():
+    run_py("""
+    import functools
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import attention as A
+
+    mesh = make_test_mesh((2, 4), ('data', 'model'))
+    B, S, KV, HD, H = 4, 64, 2, 16, 8
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, H, HD)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((B, S, KV, HD)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, S, KV, HD)), jnp.float32)
+    kn = jnp.asarray(rng.standard_normal((B, 1, KV, HD)), jnp.float32)
+    vn = jnp.asarray(rng.standard_normal((B, 1, KV, HD)), jnp.float32)
+    pos = jnp.int32(37)
+    kvm = A.kv_index_map(H, H, KV)
+
+    core = functools.partial(A.gqa_decode_core, kv_map=kvm)
+    o_ref, ck_ref, cv_ref = core(q, kn, vn, ck, cv, pos)
+
+    sharded = jax.shard_map(
+        functools.partial(core, axis_name='model'), mesh=mesh,
+        axis_names={'model'},
+        in_specs=(P(None, None, None), P(None, None, None, None),
+                  P(None, None, None, None), P(None, 'model', None, None),
+                  P(None, 'model', None, None), P()),
+        out_specs=(P(None, None, None), P(None, 'model', None, None),
+                   P(None, 'model', None, None)))
+    with jax.set_mesh(mesh):
+        o_s, ck_s, cv_s = jax.jit(sharded)(q, kn, vn, ck, cv, pos)
+    np.testing.assert_allclose(np.asarray(o_s), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(ck_s), np.asarray(ck_ref))
+    print('flash decode sharded == ref')
+    """)
+
+
+def test_ring_cache_decode_sharded():
+    run_py("""
+    import functools
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import attention as A
+
+    mesh = make_test_mesh((2, 4), ('data', 'model'))
+    B, W, KV, HD, H = 2, 32, 1, 8, 4
+    rng = np.random.default_rng(1)
+    ck = jnp.asarray(rng.standard_normal((B, W, KV, HD)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((B, W, KV, HD)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, H, HD)), jnp.float32)
+    kn = jnp.asarray(rng.standard_normal((B, 1, KV, HD)), jnp.float32)
+    vn = jnp.asarray(rng.standard_normal((B, 1, KV, HD)), jnp.float32)
+    pos = jnp.int32(100)  # deep past the window
+    kvm = A.kv_index_map(H, H, KV)
+    core = functools.partial(A.gqa_decode_core, kv_map=kvm, window=W, ring=True)
+    o_ref, *_ = core(q, kn, vn, ck, cv, pos)
+    sharded = jax.shard_map(functools.partial(core, axis_name='model'),
+        mesh=mesh, axis_names={'model'},
+        in_specs=(P(None,None,None), P(None,None,None,None), P(None,None,None,None),
+                  P(None,'model',None,None), P(None,'model',None,None), P()),
+        out_specs=(P(None,None,None), P(None,'model',None,None), P(None,'model',None,None)))
+    with jax.set_mesh(mesh):
+        o_s, *_ = jax.jit(sharded)(q, kn, vn, ck, cv, pos)
+    np.testing.assert_allclose(np.asarray(o_s), np.asarray(o_ref), rtol=2e-5, atol=2e-5)
+    print('ring cache sharded == ref')
+    """)
+
+
+def test_int8_compressed_allreduce():
+    run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.launch.mesh import make_test_mesh
+    from repro.optim import compressed_allreduce
+
+    mesh = make_test_mesh((8,), ('pod',))
+    g = {'w': jnp.asarray(np.random.default_rng(0).standard_normal(1024),
+                          jnp.float32),
+         'tiny': jnp.ones((3,), jnp.float32)}
+    with jax.set_mesh(mesh):
+        out = jax.jit(lambda g: compressed_allreduce(g, mesh, ('pod',)))(g)
+    # psum over replicated = x * 8
+    expect = g['w'] * 8
+    err = np.abs(np.asarray(out['w']) - np.asarray(expect))
+    # int8 grid error bound: 8 * amax/127/2 per shard after reduce
+    amax = float(jnp.max(jnp.abs(expect)))
+    assert err.max() <= amax / 127 + 1e-5, err.max()
+    np.testing.assert_allclose(np.asarray(out['tiny']), 8.0)
+    print('compressed allreduce ok')
+    """)
+
+
+def test_sharded_train_matches_single_device():
+    run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.steps import build_train_step
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.models import init_params
+    from repro.optim import init_state
+    from repro.data import DataConfig, SyntheticLM
+
+    cfg = get_config('qwen2-7b').reduced()
+    losses = {}
+    for kind, shape in [('multi', (2, 4)), ('single', (1, 1))]:
+        mesh = make_test_mesh(shape, ('data', 'model'))
+        rcfg = RunConfig(model=cfg, seq_len=32, global_batch=4, mode='train',
+                         learning_rate=1e-3, warmup_steps=2)
+        with jax.set_mesh(mesh):
+            f, shapes, shards = build_train_step(mesh, cfg, rcfg)
+            params = init_params(jax.random.PRNGKey(0), cfg,
+                                 tp=mesh.shape['model'])
+            params = jax.device_put(params, shards['params'])
+            opt = jax.device_put(init_state(params), shards['opt_state'])
+            data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                          seq_len=32, global_batch=4))
+            ls = []
+            pre = jnp.zeros((4, 0, cfg.d_model), jnp.float32)
+            for s in range(4):
+                t, g = data.batch(s)
+                params, opt, m = f(params, opt, jnp.asarray(t),
+                                   jnp.asarray(g), pre, jnp.int32(s))
+                ls.append(float(m['loss']))
+            losses[kind] = ls
+    # different tp padding => params differ; losses should still be close in
+    # trajectory since padded heads are dead and vocab mask exact
+    np.testing.assert_allclose(losses['multi'], losses['single'],
+                               rtol=2e-2, atol=2e-2)
+    print('sharded vs single loss:', losses)
+    """, timeout=600)

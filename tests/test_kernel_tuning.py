@@ -1,0 +1,42 @@
+"""Tile planning: every plan must fit VMEM, align to packing + MXU, and the
+planned tiles must produce correct results through the kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SCHEMES, get_scheme, quantize_linear
+from repro.core.packing import make_layout
+from repro.kernels import ops, ref
+from repro.kernels.tuning import VMEM_BYTES, plan_tiles, vmem_usage
+
+
+@pytest.mark.parametrize("scheme", list(SCHEMES))
+@pytest.mark.parametrize("K,N,B", [(4096, 4096, 8), (18944, 3584, 1),
+                                   (896, 151936, 64)])
+def test_plans_fit_and_align(scheme, K, N, B):
+    lay = make_layout(SCHEMES[scheme])
+    plan = plan_tiles(lay, B, K, N)
+    assert plan.vmem_bytes <= VMEM_BYTES
+    assert plan.bk % lay.k_block == 0
+    assert plan.bk % 128 == 0
+    assert plan.bn % 128 == 0
+    # claimed usage formula is self-consistent
+    assert plan.vmem_bytes == vmem_usage(lay, plan.bb, plan.bk, plan.bn)
+
+
+def test_planned_tiles_run_correctly():
+    s = get_scheme("fp5.33-e2m3")
+    lay = make_layout(s)
+    K, N, B = 1536, 512, 4
+    plan = plan_tiles(lay, B, K, N)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32) * 0.02)
+    x = jnp.asarray(rng.standard_normal((B, K)).astype(np.float32))
+    q = quantize_linear(w, s)
+    y = ops.ams_matmul(x, q.packed, interpret=True, block_b=plan.bb,
+                       block_k=plan.bk, block_n=plan.bn)
+    xb = x.astype(jnp.bfloat16).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.ams_matmul_ref(xb, q.packed)),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests on REDUCED configs (CPU, 1 device).
+
+For each assigned arch: instantiate a tiny same-family config, run one
+forward/train step and a prefill->decode chain; assert shapes + finiteness,
+and that decode logits match the prefill forward at the same position
+(cache-consistency — the strongest cheap correctness check we have).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import decode_step, forward_seq, init_params, make_cache
+
+ARCHS = list_archs()
+
+
+def tiny(name):
+    return get_config(name).reduced()
+
+
+def data(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    prefix = None
+    if cfg.num_prefix_embeds:
+        prefix = jnp.asarray(
+            rng.standard_normal((B, cfg.num_prefix_embeds, cfg.d_model)),
+            jnp.float32)
+    return tokens, prefix
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = tiny(arch)
+    tokens, prefix = data(cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    logits, aux, _ = forward_seq(params, tokens, cfg, prefix_embeds=prefix,
+                                 dtype=jnp.float32, remat=False)
+    S_total = tokens.shape[1] + (prefix.shape[1] if prefix is not None else 0)
+    from repro.models import model_dims
+    V = model_dims(cfg, 1).V
+    assert logits.shape == (2, S_total, V)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_grads_finite(arch):
+    cfg = tiny(arch)
+    tokens, prefix = data(cfg)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+
+    def loss_fn(p):
+        logits, aux, _ = forward_seq(p, tokens[:, :-1], cfg,
+                                     prefix_embeds=prefix,
+                                     dtype=jnp.float32, remat=True)
+        tgt = tokens[:, 1:]
+        pl = logits[:, -tgt.shape[1]:]  # skip prefix positions
+        ll = jax.nn.log_softmax(pl, axis=-1)
+        nll = -jnp.take_along_axis(ll, tgt[..., None], axis=-1).mean()
+        return nll + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves)
+    # embedding grad must be nonzero (learning signal flows end to end)
+    assert float(jnp.abs(grads["embed"]["w"]).max()) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """decode(t | cache(prefill(t_0..t_{n-1}))) == forward(t_0..t_n)[-1]."""
+    cfg = tiny(arch)
+    B, S = 2, 12
+    tokens, prefix = data(cfg, B=B, S=S, seed=3)
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    P = prefix.shape[1] if prefix is not None else 0
+
+    # full forward over S tokens
+    full_logits, _, _ = forward_seq(params, tokens, cfg, prefix_embeds=prefix,
+                                    dtype=jnp.float32, remat=False)
+
+    # prefill on S-1 tokens, then decode token S-1
+    pre_logits, _, cache = forward_seq(params, tokens[:, :-1], cfg,
+                                       prefix_embeds=prefix, want_cache=True,
+                                       dtype=jnp.float32, remat=False)
+    # prefill caches have capacity P+S-1; decode inserts at pos P+S-1 -> need
+    # capacity P+S: re-host into a larger zero cache
+    cap = P + S
+    big = make_cache(cfg, B, cap, dtype=jnp.float32)
+
+    def embed_into(big_leaf, small_leaf):
+        if big_leaf.shape == small_leaf.shape:
+            return small_leaf.astype(big_leaf.dtype)
+        # sequence-capacity axis is axis 2 for stacked [G, B, S, ...] leaves
+        # and axis 1 for unstacked; pad at the end
+        pads = [(0, b - s) for b, s in zip(big_leaf.shape, small_leaf.shape)]
+        return jnp.pad(small_leaf.astype(big_leaf.dtype), pads)
+
+    cache = jax.tree.map(embed_into, big, cache)
+    dec_logits, _ = decode_step(params, tokens[:, -1], cache,
+                                jnp.int32(P + S - 1), cfg, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits[:, -1]),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_vocab_padding_masked():
+    cfg = tiny("qwen2-7b")
+    tokens, _ = data(cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    from repro.models import model_dims
+    # simulate tp=4 padding: vocab 512 is already divisible; force odd vocab
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, vocab_size=509)
+    params2 = init_params(jax.random.PRNGKey(0), cfg2, tp=4)
+    tokens2 = jnp.clip(tokens, 0, 508)
+    logits, _, _ = forward_seq(params2, tokens2, cfg2, tp=4,
+                               dtype=jnp.float32, remat=False)
+    V = model_dims(cfg2, 4).V
+    assert V == 512
+    probs = jax.nn.softmax(logits, axis=-1)
+    pad_mass = float(probs[..., 509:].sum())
+    assert pad_mass < 1e-6
+
+
+def test_head_padding_dead():
+    """Padded q-heads must not influence the output."""
+    cfg = tiny("qwen1.5-4b")  # 4 heads reduced; pad to tp=8
+    tokens, _ = data(cfg)
+    p8 = init_params(jax.random.PRNGKey(5), cfg, tp=8)
+    logits, _, _ = forward_seq(p8, tokens, cfg, tp=8, dtype=jnp.float32,
+                               remat=False)
+    # zero out padded-head columns of wq: output must be identical
+    # (padded slots are group-major interleaved — use head_mask)
+    from repro.models import model_dims
+    dims = model_dims(cfg, 8)
+    hd = dims.hd
+    col_mask = np.repeat(np.asarray(dims.head_mask), hd)  # [H*hd]
+
+    p8b = jax.tree.map(lambda x: x, p8)
+    w = p8b["layers"]["sub0"]["attn"]["wq"]["w"]
+    p8b["layers"]["sub0"]["attn"]["wq"]["w"] = w * jnp.asarray(col_mask)[None, None, :]
+    logits2, _, _ = forward_seq(p8b, tokens, cfg, tp=8, dtype=jnp.float32,
+                                remat=False)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits2),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,73 @@
+"""Serving-path fidelity: AMS-quantized model outputs track fp16 outputs.
+
+Uses logit cosine similarity on reduced models (random init — absolute CE
+is meaningless, directional fidelity is what PTQ must preserve). The paper's
+ordering must hold: more effective bits -> higher fidelity, and fp5.33 must
+be close to fp6.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import QuantPolicy
+from repro.models import forward_seq, init_params
+from repro.models.common import quantize_params
+
+
+def cos(a, b):
+    a = np.asarray(a, np.float64).ravel()
+    b = np.asarray(b, np.float64).ravel()
+    return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-30))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2-7b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 24)), jnp.int32)
+    ref_logits, _, _ = forward_seq(params, tokens, cfg, dtype=jnp.float32,
+                                   remat=False)
+    return cfg, params, tokens, ref_logits
+
+
+def logits_for(cfg, params, tokens, scheme, strategy="set_lsb", impl="ref"):
+    pol = QuantPolicy(scheme=scheme, strategy=strategy, impl=impl,
+                      min_elements=1 << 10)
+    qp = quantize_params(params, pol)
+    out, _, _ = forward_seq(qp, tokens, cfg, policy=pol, dtype=jnp.float32,
+                            remat=False)
+    return out
+
+
+def test_fidelity_ordering(setup):
+    cfg, params, tokens, ref = setup
+    sims = {}
+    for scheme in ("fp6-e2m3", "fp5.33-e2m3", "fp5-e2m2", "fp4.25-e2m2",
+                   "fp4-e2m1"):
+        sims[scheme] = cos(logits_for(cfg, params, tokens, scheme), ref)
+    assert sims["fp6-e2m3"] > 0.99
+    assert sims["fp5.33-e2m3"] > 0.98
+    assert sims["fp5.33-e2m3"] >= sims["fp4-e2m1"]
+    assert sims["fp4.25-e2m2"] >= sims["fp4-e2m1"] - 1e-3
+    # the paper's headline: fp5.33 ~ fp6
+    assert sims["fp6-e2m3"] - sims["fp5.33-e2m3"] < 0.015, sims
+
+
+def test_requantize_at_least_as_faithful(setup):
+    cfg, params, tokens, ref = setup
+    s_set = cos(logits_for(cfg, params, tokens, "fp4.25-e2m2", "set_lsb"), ref)
+    s_rq = cos(logits_for(cfg, params, tokens, "fp4.25-e2m2", "requantize"), ref)
+    assert s_rq >= s_set - 5e-4, (s_set, s_rq)
+
+
+def test_impls_agree(setup):
+    cfg, params, tokens, _ = setup
+    a = logits_for(cfg, params, tokens, "fp5.33-e2m3", impl="ref")
+    b = logits_for(cfg, params, tokens, "fp5.33-e2m3", impl="fused_ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-2,
+                               atol=2e-2)
+    assert cos(a, b) > 0.9999
