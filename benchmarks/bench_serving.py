@@ -1,0 +1,136 @@
+"""Continuous-batching serving benchmark: fp16 vs AMS-quantized in one run.
+
+Drives ``repro.launch.engine.ServeEngine`` under a Poisson open-loop arrival
+process (the "heavy traffic" shape: requests arrive on their own schedule,
+not when the server is ready) and reports, per scheme:
+
+  * tokens/sec           — aggregate decode throughput over the run
+  * p50 / p99 per-token  — wall-clock per engine tick that produced tokens
+    latency                (every in-flight request advances one token/tick,
+                            so tick latency IS per-token latency)
+  * mean request latency — submit -> finish, in ticks (queueing included)
+  * utilization          — mean fraction of KV slots busy
+
+On CPU the quantized path pays dequantization compute, so the fp16-relative
+speedup here validates *plumbing*, not the paper's memory-bound 2.8-3.2x —
+that needs accelerator HBM bandwidth (see benchmarks/bench_kernel_speedup.py
+for the analytic Table-3 model). Arrivals are tick-indexed (deterministic
+given --seed) so both schemes see the IDENTICAL workload.
+
+Run (reduced, CPU):
+    PYTHONPATH=src python -m benchmarks.bench_serving --reduced
+
+CSV lines go to stdout in the benchmarks/run.py style:
+    serving/<scheme>,<us_per_token>,tokens_per_s=... p50_ms=... p99_ms=...
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def poisson_workload(n_requests: int, rate: float, prompt_mean: int,
+                     gen_tokens: int, vocab: int, seed: int):
+    """Tick-indexed open-loop workload: (arrival_tick, prompt, max_tokens).
+
+    Inter-arrival gaps are geometric (discrete-time Poisson process at
+    `rate` requests/tick); prompt lengths are Poisson around prompt_mean.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.geometric(min(rate, 1.0), n_requests)
+    arrivals = np.cumsum(gaps) - gaps[0]  # first request at tick 0
+    work = []
+    for t in arrivals:
+        plen = max(1, int(rng.poisson(prompt_mean)))
+        work.append((int(t), rng.integers(0, vocab, plen), gen_tokens))
+    return work
+
+
+def run_scheme(scheme: str, work, args):
+    from repro.launch.engine import ServeEngine
+
+    eng = ServeEngine(args.arch, reduced=args.reduced, scheme=scheme,
+                      impl=args.impl, slots=args.slots,
+                      capacity=args.capacity, seed=args.seed,
+                      verbose=not args.quiet)
+    # warm the jit before the clock matters: one throwaway request, then
+    # drop its ticks from the metrics (compile would otherwise land in p99)
+    warm = eng.submit(np.zeros(1, np.int64), 1)
+    eng.run()
+    assert warm.done
+    eng.reset_metrics()
+
+    reqs, pending = [], list(work)
+    util = []
+    while pending or eng.has_work:
+        while pending and pending[0][0] <= eng.tick:
+            _, prompt, mt = pending.pop(0)
+            reqs.append(eng.submit(prompt, mt))
+        eng.step()
+        util.append(eng.active_count / args.slots)
+
+    s = eng.stats()
+    lat_ticks = [r.finish_tick - r.submit_tick for r in reqs]
+    return {
+        "tokens_per_s": s["tokens_per_s"],
+        "p50_ms": s["decode_ms_median"],
+        "p99_ms": s["decode_ms_p99"],
+        "req_latency_ticks": float(np.mean(lat_ticks)),
+        "utilization": float(np.mean(util)),
+        "ticks": s["ticks"],
+        "tokens": s["tokens_generated"],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True, help="--no-reduced runs the full config")
+    ap.add_argument("--schemes", default="fp16,fp5.33-e2m3",
+                    help="comma-separated; all run against the same workload")
+    ap.add_argument("--impl", default="ref",
+                    choices=["ref", "fused_ref", "pallas", "pallas_interpret"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.3,
+                    help="mean arrivals per engine tick (Poisson)")
+    ap.add_argument("--prompt-mean", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=8, help="per request")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    work = poisson_workload(args.requests, args.rate, args.prompt_mean,
+                            args.tokens, cfg.vocab_size, args.seed)
+
+    results = {}
+    for scheme in args.schemes.split(","):
+        scheme = scheme.strip()
+        results[scheme] = r = run_scheme(scheme, work, args)
+        us_per_tok = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
+        print(f"serving/{scheme},{us_per_tok:.1f},"
+              f"tokens_per_s={r['tokens_per_s']:.2f} "
+              f"p50_ms={r['p50_ms']:.2f} p99_ms={r['p99_ms']:.2f} "
+              f"req_latency_ticks={r['req_latency_ticks']:.1f} "
+              f"util={r['utilization']:.2f}", flush=True)
+
+    if "fp16" in results:
+        base = results["fp16"]["tokens_per_s"]
+        for scheme, r in results.items():
+            if scheme != "fp16" and base:
+                print(f"serving/speedup_vs_fp16/{scheme},0,"
+                      f"x={r['tokens_per_s'] / base:.2f} "
+                      f"(CPU: compute-bound; paper's 2.8-3.2x is HBM-bound)")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,15 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.packing import PackLayout
 
+# renamed TPUCompilerParams -> CompilerParams in newer jax; same signature
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+if _CompilerParams is None:  # pragma: no cover - future jax renames
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is unsupported by the AMS "
+        "Pallas kernel")
+
 
 # --------------------------------------------------------------------------
 # In-kernel bit restoration (shared by both containers)
@@ -152,7 +161,7 @@ def ams_matmul_padded(
     out_spec = pl.BlockSpec((bb, bn), lambda b, n, k: (b, n))
     grid = (nb, nn, nk)
     scratch = [pltpu.VMEM((bb, bn), jnp.float32)]
-    params = pltpu.CompilerParams(
+    params = _CompilerParams(
         dimension_semantics=("parallel", "parallel", "arbitrary"),
     )
 

@@ -6,6 +6,8 @@ kernel only ever sees fully-tiled operands, then slices the result back.
 
 from __future__ import annotations
 
+import math
+
 import jax.numpy as jnp
 
 from repro.core.packing import PackedWeight
@@ -30,7 +32,8 @@ def ams_matmul(
     lay = pw.layout
     K, N = pw.K, pw.N
     lead = x.shape[:-1]
-    B = int(jnp.prod(jnp.asarray(lead))) if lead else 1
+    # static shape math — jnp.prod here becomes a tracer under scan/jit
+    B = math.prod(lead) if lead else 1
     x2 = x.reshape(B, x.shape[-1])
 
     bk = block_k or _k.default_bk(lay)

@@ -2,25 +2,61 @@
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state (the dry-run sets XLA_FLAGS before any jax import; tests see 1 device).
+
+Also carries the small compat layer for older jax releases (0.4.x): no
+``jax.sharding.AxisType`` and no ``jax.set_mesh`` — ``make_mesh``/``use_mesh``
+below pick the right spelling so serving code runs on both.
 """
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit/auto axis types
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _mk_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes)
+
+
+def use_mesh(mesh):
+    """Context manager activating `mesh` as the ambient mesh.
+
+    ``jax.set_mesh`` on current jax; the Mesh object's own context manager
+    on older releases (sufficient for the Auto-axis style used here).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return _mk_mesh(shape, axes)
+
+
+def make_driver_mesh(kind: str = "none"):
+    """Kind-dispatch mesh for the serve/train drivers: 'none' = 1x1 host mesh."""
+    if kind == "none":
+        return _mk_mesh((1, 1), ("data", "model"))
+    return make_production_mesh(multi_pod=(kind == "multi"))
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for multi-device unit tests (8 forced host devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return _mk_mesh(shape, axes)
 
 
 def dp_axes(mesh) -> tuple:

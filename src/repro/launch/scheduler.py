@@ -1,0 +1,110 @@
+"""Request queue + slot admission for the continuous-batching engine.
+
+The scheduler owns the *host-side* half of serving state: a FIFO queue of
+pending requests and the mapping of requests into free slots of the fixed-
+capacity KV cache. Admission is capacity-safe by construction — a request is
+only accepted at submit time if its full footprint (prefix embeddings +
+prompt + generated tokens) fits one cache slot, so the engine never has to
+preempt or re-admit mid-flight.
+
+Policy is deliberately the simplest thing that is production-shaped: strict
+FIFO admission into any free slot (no reordering, no priority tiers). The
+interface (``submit`` / ``admit`` / ``queue_depth``) is what a later
+shortest-job-first or paged-KV scheduler would keep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifecycle inside the engine."""
+
+    rid: int
+    prompt: np.ndarray                    # [P] int32 token ids
+    max_tokens: int                       # tokens to generate (greedy)
+    prefix_embeds: Optional[np.ndarray] = None  # [n_prefix, D] f32 (VLM/audio)
+
+    # lifecycle, filled by the scheduler/engine (tick = engine step index)
+    submit_tick: int = -1
+    admit_tick: int = -1
+    finish_tick: int = -1
+    slot: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_prefix(self) -> int:
+        return 0 if self.prefix_embeds is None else self.prefix_embeds.shape[0]
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def kv_need(self) -> int:
+        """Cache positions this request writes: every fed input inserts one
+        KV entry; the last generated token is never fed back."""
+        return self.n_prefix + self.prompt_len + self.max_tokens - 1
+
+    @property
+    def done(self) -> bool:
+        return self.finish_tick >= 0
+
+
+class FIFOScheduler:
+    """Strict-FIFO admission into free KV-cache slots.
+
+    ``capacity`` is the per-slot sequence capacity of the engine's KV cache;
+    ``max_queue`` (optional) bounds the pending queue — past it, ``submit``
+    raises, which is the backpressure signal a frontend would surface as 429.
+    """
+
+    def __init__(self, capacity: int, max_queue: Optional[int] = None):
+        self.capacity = capacity
+        self.max_queue = max_queue
+        self._queue: Deque[Request] = deque()
+
+    def submit(self, req: Request, tick: int) -> Request:
+        if req.max_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_tokens must be >= 1")
+        if req.prompt_len < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.kv_need > self.capacity:
+            raise ValueError(
+                f"request {req.rid} needs {req.kv_need} cache positions "
+                f"(prefix {req.n_prefix} + prompt {req.prompt_len} + "
+                f"{req.max_tokens} tokens - 1) but slot capacity is "
+                f"{self.capacity}")
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            raise RuntimeError(
+                f"queue full ({self.max_queue}); request {req.rid} rejected")
+        req.submit_tick = tick
+        self._queue.append(req)
+        return req
+
+    def admit(self, free_slots: List[int], tick: int) -> List[Tuple[int, Request]]:
+        """Assign queued requests to free slots, FIFO order. Returns
+        (slot, request) pairs; the engine resets each slot's cache row
+        before the request's first token is fed."""
+        placed = []
+        for slot in free_slots:
+            if not self._queue:
+                break
+            req = self._queue.popleft()
+            req.admit_tick = tick
+            req.slot = slot
+            placed.append((slot, req))
+        return placed
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def __len__(self) -> int:
+        return len(self._queue)

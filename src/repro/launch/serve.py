@@ -1,105 +1,69 @@
-"""Serving driver: offline AMS-Quant PTQ -> prefill -> batched decode loop.
+"""Serving driver: offline AMS-Quant PTQ -> continuous-batching decode.
 
 The paper's deployment scenario: weights are quantized/packed ahead of time
 (§3.3 "Ahead-of-time weight packing"), then the decode loop streams packed
-planes and restores on the fly. On CPU this runs reduced configs end to end
-(quantized vs fp16 generations agree to high token-match rate — see
-tests/test_serve_e2e.py); on a pod the same driver runs the production mesh.
+planes and restores on the fly. Serving runs on the continuous-batching
+engine in ``repro.launch.engine`` (``ServeEngine``): requests enter a FIFO
+queue, a scheduler admits them into free KV-cache slots, and one jitted
+slot-masked decode step serves all in-flight requests per tick.
+
+``generate`` below is a thin fixed-batch wrapper over that engine, kept for
+one-shot use and benchmarks (quantized vs fp16 generations agree to high
+token-match rate — see tests/test_engine.py and tests/test_serve_quant.py).
+On CPU this runs reduced configs end to end; on a pod the same step builder
+carries the production mesh shardings.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
         --scheme fp5.33-e2m3 --tokens 32
+
+For true streaming-arrival serving, construct ``ServeEngine`` directly (see
+examples/serve_continuous.py and benchmarks/bench_serving.py).
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import RunConfig
-from repro.core.policy import QuantPolicy
-from repro.launch.steps import build_prefill_step, build_serve_step
-from repro.launch.train import make_mesh
-from repro.models import init_params, make_cache
-from repro.models.common import quantize_params
+from repro.launch.engine import ServeEngine
 
 
 def generate(arch: str, *, reduced=True, scheme="fp5.33-e2m3",
              strategy="set_lsb", impl="ref", mesh_kind="none",
              batch=2, prompt_len=16, gen_tokens=16, seed=0,
-             params=None, capacity=None):
+             params=None, capacity=None, prompts=None, prefix_embeds=None):
+    """One-shot batched generation via the continuous-batching engine.
+
+    Submits ``batch`` requests at tick 0 (prompts drawn from ``seed`` unless
+    given explicitly as ``prompts`` [batch, prompt_len]) and drains the
+    engine. Returns (tokens [batch, gen_tokens], stats).
+    """
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
+
+    rng = np.random.default_rng(seed)
+    if prompts is None:
+        prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len))
+    prompts = np.asarray(prompts, np.int64)
+    batch, prompt_len = prompts.shape  # explicit prompts win over the kwargs
     cap = capacity or (prompt_len + gen_tokens + cfg.num_prefix_embeds)
-    quant = None
-    if scheme != "fp16":
-        quant = QuantPolicy(scheme=scheme, strategy=strategy, impl=impl,
-                            min_elements=1 << 10)
-    rcfg = RunConfig(model=cfg, seq_len=cap, global_batch=batch,
-                     mode="decode", quant=quant)
-    mesh = make_mesh(mesh_kind)
+    if cfg.num_prefix_embeds and prefix_embeds is None:
+        prefix_embeds = rng.standard_normal(
+            (batch, cfg.num_prefix_embeds, cfg.d_model)).astype(np.float32)
 
-    with jax.set_mesh(mesh):
-        tp = mesh.shape["model"]
-        if params is None:
-            params = init_params(jax.random.PRNGKey(seed), cfg, tp=tp)
-        params = jax.tree.map(
-            lambda x: x.astype(jnp.bfloat16) if x.ndim >= 2 else x, params)
-        if quant is not None:
-            t0 = time.time()
-            params = quantize_params(params, quant)
-            print(f"[ptq] quantized to {scheme} ({strategy}) "
-                  f"in {time.time()-t0:.1f}s", flush=True)
-
-        # --- prefill on a prompt
-        rng = np.random.default_rng(seed)
-        prompt = jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)
-        prefix = None
-        if cfg.num_prefix_embeds:
-            prefix = jnp.asarray(rng.standard_normal(
-                (batch, cfg.num_prefix_embeds, cfg.d_model)), jnp.float32)
-
-        from repro.models import forward_seq, decode_step
-        policy = quant
-        logits, _, cache = forward_seq(
-            params, prompt, cfg, tp=tp, policy=policy, want_cache=True,
-            prefix_embeds=prefix, remat=False, dtype=jnp.bfloat16)
-        # re-host prefill cache into the full-capacity decode cache
-        big = make_cache(cfg, batch, cap, tp=tp, dtype=jnp.bfloat16)
-
-        def into(b, s):
-            if b.shape == s.shape:
-                return s.astype(b.dtype)
-            pads = [(0, x - y) for x, y in zip(b.shape, s.shape)]
-            return jnp.pad(s.astype(b.dtype), pads)
-
-        cache = jax.tree.map(into, big, cache)
-        pos0 = prompt_len + cfg.num_prefix_embeds
-
-        token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        out = [np.asarray(token)]
-        lat = []
-        step_jit = jax.jit(
-            lambda p, t, c, q: decode_step(p, t, c, q, cfg, tp=tp,
-                                           policy=policy,
-                                           dtype=jnp.bfloat16),
-            donate_argnums=(2,))
-        for i in range(gen_tokens - 1):
-            t0 = time.time()
-            logits_i, cache = step_jit(params, token, cache,
-                                       jnp.int32(pos0 + i))
-            token = jnp.argmax(logits_i, axis=-1).astype(jnp.int32)
-            token.block_until_ready()
-            lat.append(time.time() - t0)
-            out.append(np.asarray(token))
-    toks = np.stack(out, axis=1)
-    return toks, {"decode_ms_median": 1e3 * float(np.median(lat)) if lat else 0.0}
+    eng = ServeEngine(arch, reduced=reduced, scheme=scheme, strategy=strategy,
+                      impl=impl, mesh_kind=mesh_kind, slots=batch,
+                      capacity=cap, seed=seed, params=params, verbose=True)
+    reqs = [eng.submit(prompts[b], gen_tokens,
+                       prefix_embeds=(prefix_embeds[b]
+                                      if prefix_embeds is not None else None))
+            for b in range(prompts.shape[0])]
+    stats = eng.run()
+    toks = np.stack([np.asarray(r.tokens, np.int64) for r in reqs])
+    return toks, stats
 
 
 def main():

@@ -282,6 +282,73 @@ def build_serve_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
                                     cache=c_shard, pos=scalar)
 
 
+def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
+    """Slot-masked decode step for the continuous-batching engine.
+
+    One tick serves every slot of the fixed-capacity KV cache at its OWN
+    position: ``pos`` is [B] int32 per-slot insert positions (negative =
+    idle slot; its cache write is suppressed and its output is garbage the
+    engine ignores). Slots still consuming their prompt ride the same step
+    as decoding slots — chunked prefill — and the engine discards their
+    logits until the last prompt token.
+
+    Greedy sampling (argmax) runs on-device so each tick moves only [B]
+    int32s back to the host scheduler.
+
+    step(params, token [B], pos [B], cache[, embeds [B, D], embed_mask [B]])
+        -> (next_token [B], cache)
+
+    The embeds override exists only when the config has a modality frontend
+    (``num_prefix_embeds > 0``): prefix embeddings stream through the same
+    step during prefill instead of a separate prefill program.
+    """
+    ctx = make_ctx(mesh, "decode")
+    if ctx.tp == 1:  # trivial model axis: skip the seq-shard shard_map path
+        ctx = dataclasses.replace(ctx, seq_shard_cache=False)
+    B, S = rcfg.global_batch, rcfg.seq_len
+    dp = batch_dp(mesh, B)
+    policy = rcfg.quant if rcfg.quantized else None
+    has_prefix = cfg.num_prefix_embeds > 0
+
+    def core(params, token, pos, cache, embeds=None, embed_mask=None):
+        logits, cache = decode_step(
+            params, token, cache, pos, cfg, tp=ctx.tp, policy=policy,
+            ctx=ctx, dtype=jnp.bfloat16, embeds=embeds, embed_mask=embed_mask)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    pshape = quantized_param_shapes(cfg, rcfg, ctx.tp)
+    p_shard = SH.params_shardings(pshape, mesh, fsdp=False)
+    cache_shape = jax.eval_shape(
+        lambda: make_cache(cfg, B, S, tp=ctx.tp, dtype=jnp.bfloat16))
+    c_shard = SH.cache_shardings(cache_shape, mesh, dp=dp, seq_shard=True)
+    tok_shard = NamedSharding(mesh, P(dp))
+
+    if has_prefix:
+        def engine_fn(params, token, pos, cache, embeds, embed_mask):
+            return core(params, token, pos, cache, embeds, embed_mask)
+        in_shardings = (p_shard, None, None, c_shard, None, None)
+    else:
+        def engine_fn(params, token, pos, cache):
+            return core(params, token, pos, cache)
+        in_shardings = (p_shard, None, None, c_shard)
+
+    jitted = jax.jit(engine_fn, in_shardings=in_shardings,
+                     out_shardings=(tok_shard, c_shard),
+                     donate_argnums=(3,))
+    arg_shapes = dict(
+        params=pshape,
+        token=jax.ShapeDtypeStruct((B,), jnp.int32, sharding=tok_shard),
+        pos=jax.ShapeDtypeStruct((B,), jnp.int32, sharding=tok_shard),
+        cache=cache_shape,
+    )
+    if has_prefix:
+        arg_shapes["embeds"] = jax.ShapeDtypeStruct((B, cfg.d_model),
+                                                    jnp.float32)
+        arg_shapes["embed_mask"] = jax.ShapeDtypeStruct((B,), jnp.bool_)
+    return jitted, arg_shapes, dict(params=p_shard, token=tok_shard,
+                                    pos=tok_shard, cache=c_shard)
+
+
 def build_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
     if rcfg.mode == "train":
         return build_train_step(mesh, cfg, rcfg)

@@ -29,17 +29,14 @@ from repro.launch.fault_tolerance import (
     StragglerMonitor,
     heartbeat_file,
 )
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, make_driver_mesh
 from repro.launch.steps import build_train_step
 from repro.models import init_params
 from repro.optim import init_state
 
 
 def make_mesh(kind: str):
-    if kind == "none":
-        return jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    return make_production_mesh(multi_pod=(kind == "multi"))
+    return make_driver_mesh(kind)
 
 
 def main(argv=None):

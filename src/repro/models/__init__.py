@@ -8,4 +8,5 @@ from .transformer import (  # noqa: F401
     init_params,
     layer_pattern,
     make_cache,
+    reset_cache_slot,
 )

@@ -147,7 +147,8 @@ def flash_decode(
     q: jnp.ndarray,            # [B, H, hd]
     k_cache: jnp.ndarray,      # [B, S_loc, kv, hd]
     v_cache: jnp.ndarray,      # [B, S_loc, kv, hd_v]
-    pos: jnp.ndarray,          # scalar int32: current length (num valid keys)
+    pos: jnp.ndarray,          # int32 current length (num valid keys):
+                               #   scalar (shared) or [B] (per-slot lengths)
     *,
     kv_map: np.ndarray,
     axis_name: Optional[str] = None,   # mesh axis the S dim is sharded over
@@ -160,7 +161,10 @@ def flash_decode(
     hd_v = v_cache.shape[-1]
     scale = scale if scale is not None else 1.0 / np.sqrt(hd)
     shard = jax.lax.axis_index(axis_name) if axis_name else 0
-    k_pos = _cache_positions(S_loc, pos - 1, shard, window if ring else 0)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    pos_b = pos[:, None] if per_slot else pos  # broadcasts against [S_loc]
+    k_pos = _cache_positions(S_loc, pos_b - 1, shard, window if ring else 0)
 
     kv_n = k_cache.shape[2]
     grouped = (H % kv_n == 0) and np.array_equal(
@@ -176,17 +180,19 @@ def flash_decode(
         ke = k_cache[:, :, kvm, :]
         s = jnp.einsum("bhd,bkhd->bhk", qf, ke,
                        preferred_element_type=jnp.float32)
-    valid = (k_pos >= 0) & (k_pos < pos)  # ring slots may map to pre-history
+    valid = (k_pos >= 0) & (k_pos < pos_b)  # ring slots may map to pre-history
     if window > 0:
-        valid = valid & (pos - 1 - k_pos < window)
-    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+        valid = valid & (pos_b - 1 - k_pos < window)
+    # [B, 1, S_loc] when per-slot, [1, 1, S_loc] when shared
+    vmask = valid[:, None, :] if per_slot else valid[None, None, :]
+    s = jnp.where(vmask, s, -jnp.inf)
 
     m = s.max(axis=-1)                                   # [B, H]
     if axis_name:
         m = jax.lax.pmax(m, axis_name)
     m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
     p = jnp.exp(s - m_safe[..., None])
-    p = jnp.where(valid[None, None, :], p, 0.0)
+    p = jnp.where(vmask, p, 0.0)
     l = p.sum(axis=-1)                                   # [B, H]
     if grouped:
         g = H // kv_n
@@ -207,19 +213,30 @@ def cache_insert(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray,
                  axis_name: Optional[str] = None, ring_window: int = 0) -> jnp.ndarray:
     """Insert `new` [B, 1, kv, hd] at global position `pos` into a (possibly
     sequence-sharded, possibly ring) cache [B, S_loc, kv, hd]; no-op on
-    non-owner shards."""
+    non-owner shards.
+
+    `pos` is a scalar (whole batch at one position — the one-shot decode
+    loop) or [B] per-slot positions (continuous-batching engine). A negative
+    per-slot position suppresses the write entirely (idle slot)."""
     S_loc = cache.shape[1]
     shard = jax.lax.axis_index(axis_name) if axis_name else 0
-    slot = (pos % ring_window) if ring_window else pos
-    local = slot - shard * S_loc
-    in_range = (local >= 0) & (local < S_loc)
-    idx = jnp.clip(local, 0, S_loc - 1)
-    # select on the 1-token slice, NOT the whole cache (keeps the update
-    # O(new) in HBM traffic; a full-cache where() costs a cache-sized
-    # select per layer per step)
-    old = jax.lax.dynamic_slice_in_dim(cache, idx, 1, axis=1)
-    val = jnp.where(in_range, new.astype(cache.dtype), old)
-    return jax.lax.dynamic_update_slice_in_dim(cache, val, idx, axis=1)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def insert_one(c, n, p, seq_axis):
+        slot = (p % ring_window) if ring_window else p
+        local = slot - shard * S_loc
+        in_range = (p >= 0) & (local >= 0) & (local < S_loc)
+        idx = jnp.clip(local, 0, S_loc - 1)
+        # select on the 1-token slice, NOT the whole cache (keeps the update
+        # O(new) in HBM traffic; a full-cache where() costs a cache-sized
+        # select per layer per step)
+        old = jax.lax.dynamic_slice_in_dim(c, idx, 1, axis=seq_axis)
+        val = jnp.where(in_range, n.astype(c.dtype), old)
+        return jax.lax.dynamic_update_slice_in_dim(c, val, idx, axis=seq_axis)
+
+    if pos.ndim == 1:  # per-slot: vmap over the batch dim
+        return jax.vmap(lambda c, n, p: insert_one(c, n, p, 0))(cache, new, pos)
+    return insert_one(cache, new, pos, 1)
 
 
 # ---------------------------------------------------------------------------
@@ -279,11 +296,14 @@ def gqa_attn_decode(p, x, cache_k, cache_v, pos, cfg, dims, *,
     """x: [B, 1, D]; caches [B, S_loc, kv, hd]. Returns (out, new caches).
 
     ``core_wrap(core_fn)`` lets the caller shard_map the insert+attend core
-    (transformer.py passes a wrapper when the cache is sequence-sharded)."""
+    (transformer.py passes a wrapper when the cache is sequence-sharded).
+    ``pos`` is scalar or [B] (per-slot continuous batching)."""
     import functools
     B = x.shape[0]
     hd = dims.hd
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.full((B, 1), pos,
+                                                            jnp.int32)
     q, k, v = gqa_qkv(p, x, cfg, dims, positions, policy)
     kvm = kv_index_map(dims.H, dims.H_true, dims.kv)
     core = functools.partial(gqa_decode_core, kv_map=kvm,
@@ -388,11 +408,13 @@ def mla_decode_core(q_eff, kv_new, cache_kv, pos, *, r_kv, scale, axis_name=None
 
 
 def mla_attn_decode(p, x, cache_kv, pos, cfg, dims, *, policy=None, core_wrap=None):
-    """cache_kv: [B, S_loc, 1, r_kv+dr] compressed cache."""
+    """cache_kv: [B, S_loc, 1, r_kv+dr] compressed cache; pos scalar or [B]."""
     import functools
     r_kv, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.full((B, 1), pos,
+                                                            jnp.int32)
     q_eff = _mla_q_eff(p, x, cfg, dims, positions, policy)[:, 0]  # [B,H,r+dr]
     kv = _mla_kv_stream(p, x, cfg, positions, policy)             # [B,1,r+dr]
     scale = 1.0 / np.sqrt(cfg.qk_nope_dim + dr)

@@ -35,9 +35,14 @@ class ParallelCtx:
     def shard_map(self, f, in_specs, out_specs):
         """Manual collectives over the tp axis only; other axes stay auto."""
         assert self.mesh is not None and self.tp_axis is not None
-        return jax.shard_map(f, mesh=self.mesh, axis_names={self.tp_axis},
-                             in_specs=in_specs, out_specs=out_specs,
-                             check_vma=False)
+        if hasattr(jax, "shard_map"):
+            return jax.shard_map(f, mesh=self.mesh, axis_names={self.tp_axis},
+                                 in_specs=in_specs, out_specs=out_specs,
+                                 check_vma=False)
+        # jax 0.4.x spelling (no axis_names / check_vma)
+        from jax.experimental.shard_map import shard_map as _shard_map
+        return _shard_map(f, mesh=self.mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
 
 
 NO_CTX = ParallelCtx()

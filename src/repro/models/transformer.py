@@ -253,6 +253,22 @@ def make_cache(cfg, B: int, cap: int, tp: int = 1, dtype=jnp.bfloat16):
     return cache
 
 
+def reset_cache_slot(cache, slot):
+    """Zero batch row `slot` of every cache leaf (slot reuse in the engine).
+
+    KV entries beyond a slot's length are masked by position anyway, but the
+    SSM / RG-LRU recurrent states integrate whatever an idle slot was fed, so
+    a freed slot must be cleared before a new request is admitted into it.
+    Stacked pattern-repeat leaves carry batch at axis 1 ([G, B, ...]); tail
+    leaves at axis 0.
+    """
+    out = {"layers": jax.tree.map(lambda l: l.at[:, slot].set(0),
+                                  cache["layers"])}
+    if "tail" in cache:
+        out["tail"] = jax.tree.map(lambda l: l.at[slot].set(0), cache["tail"])
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Full model: train forward / prefill / decode
 # ---------------------------------------------------------------------------
@@ -334,8 +350,15 @@ def forward_seq(params, tokens, cfg, *, tp=1, policy=None, ctx=None,
 
 
 def decode_step(params, token, cache, pos, cfg, *, tp=1, policy=None,
-                ctx=None, dtype=jnp.bfloat16):
-    """One decode step. token: [B] int32; pos: scalar int32 (insert position).
+                ctx=None, dtype=jnp.bfloat16, embeds=None, embed_mask=None):
+    """One decode step. token: [B] int32; pos: scalar int32 (insert position)
+    or [B] int32 per-slot positions (continuous-batching engine; a negative
+    position marks an idle slot whose cache write is suppressed).
+
+    ``embeds`` [B, D] + ``embed_mask`` [B] bool optionally override the token
+    embedding per slot — the engine uses this to stream modality prefix
+    embeddings (VLM patches / audio frames) through the same decode step
+    during chunked prefill.
 
     Returns (logits [B, V], new cache)."""
     dims = model_dims(cfg, tp)
@@ -343,6 +366,10 @@ def decode_step(params, token, cache, pos, cfg, *, tp=1, policy=None,
     L, Pn = cfg.num_layers, len(pat)
     G, R = L // Pn, L % Pn
     x = _embed(params, token[:, None], cfg, dims, None, dtype, ctx=ctx)
+    if embeds is not None:
+        mask = (embed_mask if embed_mask is not None
+                else jnp.ones(token.shape, bool))
+        x = jnp.where(mask[:, None, None], embeds[:, None, :].astype(x.dtype), x)
 
     # Caches ride the scan xs/ys (slice in, updated slice out). We also
     # tried carrying the stacked cache and updating per-layer slices in

@@ -3,6 +3,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Property tests need hypothesis; keep the rest of the suite collectable
+# without it (it ships in the dev extras — see pyproject.toml).
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
