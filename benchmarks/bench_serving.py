@@ -2,7 +2,7 @@
 
 Drives ``repro.launch.engine.ServeEngine`` under a Poisson open-loop arrival
 process (the "heavy traffic" shape: requests arrive on their own schedule,
-not when the server is ready) and reports, per scheme:
+not when the server is ready) and reports, per scheme x cache mode:
 
   * tokens/sec           — aggregate decode throughput over the run
   * p50 / p99 per-token  — wall-clock per engine tick that produced tokens
@@ -17,11 +17,18 @@ that needs accelerator HBM bandwidth (see benchmarks/bench_kernel_speedup.py
 for the analytic Table-3 model). Arrivals are tick-indexed (deterministic
 given --seed) so both schemes see the IDENTICAL workload.
 
+``--paged`` / ``--contiguous`` selects the KV-cache mode (see
+`repro.cache`): paged mode stores the cache as block-table-addressed pages
+— packed AMS-e2m2 planes for quantized schemes (paged-AMS, ~3.6x smaller
+at hd=128), bf16 pages for fp16 — and admits by free-page budget instead
+of worst-case slots. Both modes land in the same CSV (registered in
+``benchmarks/run.py``), so fp16 vs AMS-paged serving is one diffable file.
+
 Run (reduced, CPU):
-    PYTHONPATH=src python -m benchmarks.bench_serving --reduced
+    PYTHONPATH=src python -m benchmarks.bench_serving --reduced --paged
 
 CSV lines go to stdout in the benchmarks/run.py style:
-    serving/<scheme>,<us_per_token>,tokens_per_s=... p50_ms=... p99_ms=...
+    serving/<scheme>/<cache-mode>,<us_per_token>,tokens_per_s=... p50_ms=...
 """
 
 from __future__ import annotations
@@ -48,16 +55,29 @@ def poisson_workload(n_requests: int, rate: float, prompt_mean: int,
     return work
 
 
+def cache_config_for(scheme: str, args):
+    """--paged maps to paged-AMS for quantized schemes, paged-bf16 for fp16.
+    --impl carries over to the paged-attention path too (fused_ref has no
+    cache analogue — the gather-dequantize ref IS the XLA fallback)."""
+    if args.cache_mode != "paged":
+        return None
+    from repro.cache import CacheConfig
+    kind = "paged_bf16" if scheme == "fp16" else "paged_ams"
+    cache_impl = args.impl if args.impl in ("pallas", "pallas_interpret") else "ref"
+    return CacheConfig(kind=kind, page_size=args.page_size, impl=cache_impl)
+
+
 def run_scheme(scheme: str, work, args):
     from repro.launch.engine import ServeEngine
 
     eng = ServeEngine(args.arch, reduced=args.reduced, scheme=scheme,
                       impl=args.impl, slots=args.slots,
                       capacity=args.capacity, seed=args.seed,
+                      cache_config=cache_config_for(scheme, args),
                       verbose=not args.quiet)
     # warm the jit before the clock matters: one throwaway request, then
     # drop its ticks from the metrics (compile would otherwise land in p99)
-    warm = eng.submit(np.zeros(1, np.int64), 1)
+    warm = eng.submit(np.zeros(1, np.int32), 1)
     eng.run()
     assert warm.done
     eng.reset_metrics()
@@ -81,10 +101,12 @@ def run_scheme(scheme: str, work, args):
         "utilization": float(np.mean(util)),
         "ticks": s["ticks"],
         "tokens": s["tokens_generated"],
+        "kv_bytes_per_token": s["kv_bytes_per_token"],
+        "kv_compression": s["kv_compression_vs_bf16"],
     }
 
 
-def main(argv=None):
+def main(argv=None, out_lines=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="qwen2-7b")
     ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
@@ -93,6 +115,15 @@ def main(argv=None):
                     help="comma-separated; all run against the same workload")
     ap.add_argument("--impl", default="ref",
                     choices=["ref", "fused_ref", "pallas", "pallas_interpret"])
+    ap.add_argument("--paged", dest="cache_mode", action="store_const",
+                    const="paged", default="contiguous",
+                    help="paged KV cache (AMS-packed pages for quantized "
+                         "schemes, bf16 pages for fp16)")
+    ap.add_argument("--contiguous", dest="cache_mode", action="store_const",
+                    const="contiguous",
+                    help="fixed [slots, capacity] bf16 KV cache (default)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged modes)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=0.3,
                     help="mean arrivals per engine tick (Poisson)")
@@ -104,6 +135,8 @@ def main(argv=None):
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
+    out_lines = out_lines if out_lines is not None else []
+
     from repro.configs import get_config
     cfg = get_config(args.arch)
     if args.reduced:
@@ -111,25 +144,42 @@ def main(argv=None):
     work = poisson_workload(args.requests, args.rate, args.prompt_mean,
                             args.tokens, cfg.vocab_size, args.seed)
 
+    mode = args.cache_mode
     results = {}
     for scheme in args.schemes.split(","):
         scheme = scheme.strip()
         results[scheme] = r = run_scheme(scheme, work, args)
         us_per_tok = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
-        print(f"serving/{scheme},{us_per_tok:.1f},"
-              f"tokens_per_s={r['tokens_per_s']:.2f} "
-              f"p50_ms={r['p50_ms']:.2f} p99_ms={r['p99_ms']:.2f} "
-              f"req_latency_ticks={r['req_latency_ticks']:.1f} "
-              f"util={r['utilization']:.2f}", flush=True)
+        line = (f"serving/{scheme}/{mode},{us_per_tok:.1f},"
+                f"tokens_per_s={r['tokens_per_s']:.2f} "
+                f"p50_ms={r['p50_ms']:.2f} p99_ms={r['p99_ms']:.2f} "
+                f"req_latency_ticks={r['req_latency_ticks']:.1f} "
+                f"util={r['utilization']:.2f} "
+                f"kv_bytes_per_token={r['kv_bytes_per_token']} "
+                f"kv_compression={r['kv_compression']:.2f}")
+        print(line, flush=True)
+        out_lines.append(line)
 
     if "fp16" in results:
         base = results["fp16"]["tokens_per_s"]
         for scheme, r in results.items():
             if scheme != "fp16" and base:
-                print(f"serving/speedup_vs_fp16/{scheme},0,"
-                      f"x={r['tokens_per_s'] / base:.2f} "
-                      f"(CPU: compute-bound; paper's 2.8-3.2x is HBM-bound)")
+                line = (f"serving/speedup_vs_fp16/{scheme}/{mode},0,"
+                        f"x={r['tokens_per_s'] / base:.2f} "
+                        f"(CPU: compute-bound; paper's 2.8-3.2x is HBM-bound)")
+                print(line, flush=True)
+                out_lines.append(line)
     return results
+
+
+def run(out_lines, quick: bool = False):
+    """benchmarks/run.py entry: fp16 vs AMS under the SAME Poisson workload,
+    contiguous AND paged cache modes, all in one CSV."""
+    argv = ["--quiet", "--requests", "3" if quick else "6",
+            "--tokens", "4", "--slots", "2", "--capacity", "32",
+            "--rate", "0.5", "--prompt-mean", "6", "--page-size", "8"]
+    for mode in ("--contiguous", "--paged"):
+        main(argv + [mode], out_lines=out_lines)
 
 
 if __name__ == "__main__":

@@ -7,6 +7,9 @@ experiments/bench_results.txt):
     §3.1 Adaptive Searching  -> bench_adaptive_search
     Table 3 / Fig.6          -> bench_kernel_speedup (analytic Table-3 model
                                 + CPU wall-clock plumbing check)
+    Serving (beyond-paper)   -> bench_serving (fp16 vs AMS engine throughput
+                                under one Poisson workload, contiguous AND
+                                paged KV-cache modes in the same CSV)
     §Roofline summary        -> bench_roofline (reads experiments/dryrun)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
@@ -62,6 +65,11 @@ def main() -> None:
 
     print("# === kernel speedup (paper Table 3) ===", flush=True)
     bench_kernel_speedup.run(out_lines)
+
+    print("# === serving throughput: contiguous vs paged KV cache ===",
+          flush=True)
+    from benchmarks import bench_serving
+    bench_serving.run(out_lines, quick=args.quick)
 
     if not args.skip_accuracy:
         print("# === format accuracy sweep (paper Table 2 / Fig.3/5) ===",

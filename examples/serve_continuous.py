@@ -1,22 +1,31 @@
 """Continuous-batching serving in ~40 lines.
 
-Quantize a model to FP5.33 ahead of time, stand up the slot-based engine,
-and stream requests at it MID-FLIGHT: a long request decodes while shorter
-ones arrive, queue, get admitted into freed slots, and finish — all through
-one jitted slot-masked decode step. Each request's greedy output is
-identical to running it alone (batch invariance; see tests/test_engine.py).
+Quantize a model to FP5.33 ahead of time, stand up the slot-based engine
+over a PAGED, AMS-quantized KV cache (each inserted K/V vector packed to
+e2m2 planes once at insert; see docs/paged_cache.md), and stream requests
+at it MID-FLIGHT: a long request decodes while shorter ones arrive, queue,
+get admitted into freed page budget, and finish — all through one jitted
+slot-masked decode step. Pass ``--contiguous`` for the PR-1 fixed-slot
+cache (each request's greedy output is then identical to running it alone;
+batch invariance, see tests/test_engine.py).
 
-Run:  PYTHONPATH=src python examples/serve_continuous.py
+Run:  PYTHONPATH=src python examples/serve_continuous.py [--contiguous]
 """
+
+import sys
 
 import numpy as np
 
+from repro.cache import CacheConfig
 from repro.launch.engine import ServeEngine
 
 rng = np.random.default_rng(0)
 
+cache_config = (None if "--contiguous" in sys.argv[1:] else
+                CacheConfig(kind="paged_ams", page_size=16))
 eng = ServeEngine("qwen2-7b", reduced=True, scheme="fp5.33-e2m3",
-                  slots=2, capacity=48, seed=0, verbose=True)
+                  slots=2, capacity=48, seed=0, verbose=True,
+                  cache_config=cache_config)
 
 # arrival schedule: tick -> (prompt_len, max_tokens). Two slots, four
 # requests: r2/r3 must queue until r0/r1 free their slots.
@@ -39,3 +48,7 @@ print(f"\n{len(requests)} requests in {stats['ticks']} ticks | "
       f"{stats['tokens_generated']} tokens @ {stats['tokens_per_s']:.1f} tok/s "
       f"| p50 {stats['decode_ms_median']:.1f} ms "
       f"p99 {stats['decode_ms_p99']:.1f} ms per token")
+print(f"kv cache: {eng.cache_cfg.kind} | "
+      f"{stats['kv_bytes_per_token']} B/token | "
+      f"{stats['kv_compression_vs_bf16']:.2f}x vs bf16"
+      + (f" | {stats['free_pages']} pages free" if "free_pages" in stats else ""))

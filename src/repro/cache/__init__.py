@@ -1,0 +1,55 @@
+"""Paged AMS-quantized KV-cache subsystem.
+
+Layers (host -> device -> kernel):
+
+  * `config.CacheConfig`      — cache-mode selection + derived sizes
+  * `allocator.PageAllocator` — host-side free list + block-table rows
+  * `pool`                    — device page pools (bf16 or AMS packed
+                                planes), single-scatter insert, page gather
+  * `ref`                     — lattice-exact dequantize-then-attend oracle
+  * `paged_attention`         — Pallas kernel walking the block table and
+                                restoring AMS pages inside the attention loop
+
+`paged_attend(...)` below dispatches on `CacheConfig.impl`; the model
+layer (`repro.models.attention.gqa_attn_decode_paged`) is the only caller.
+See docs/paged_cache.md for the page layout and bits/value accounting.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .allocator import PageAllocator  # noqa: F401
+from .config import CACHE_KINDS, PAGED_KINDS, CacheConfig  # noqa: F401
+from .pool import (  # noqa: F401
+    compression_vs_bf16,
+    gather_kv,
+    gather_pages,
+    make_gqa_page_pool,
+    paged_insert,
+    pool_bytes_per_token,
+)
+from .ref import paged_attention_ref  # noqa: F401
+
+
+def paged_attend(q: jnp.ndarray, pool, lengths: jnp.ndarray,
+                 block_table: jnp.ndarray, ccfg: CacheConfig, *,
+                 kv_map: np.ndarray, scale: Optional[float] = None) -> jnp.ndarray:
+    """impl-dispatching paged flash-decode: q [B, H, hd] -> [B, H, hd]."""
+    if ccfg.impl == "ref":
+        return paged_attention_ref(q, pool, lengths, block_table, ccfg,
+                                   kv_map=kv_map, scale=scale)
+    from .paged_attention import paged_attention_pallas
+    # the kernel assumes the group-major head layout; every model-zoo config
+    # emits exactly that (kv_index_map), asserted here against kv_map
+    H = q.shape[1]
+    kv_n = int(np.max(kv_map)) + 1 if len(kv_map) else 1
+    if H % kv_n != 0 or not np.array_equal(kv_map, np.arange(H) // (H // kv_n)):
+        raise NotImplementedError(
+            "pallas paged attention requires the group-major GQA layout")
+    return paged_attention_pallas(q, pool, lengths, block_table, ccfg,
+                                  scale=scale,
+                                  interpret=(ccfg.impl == "pallas_interpret"))

@@ -1,0 +1,83 @@
+"""Host-side page allocator + per-request block tables.
+
+The allocator owns the free list of the device page pool. It is pure host
+state (plain ints), mirroring the scheduler's split: device tensors never
+hold allocation metadata, so allocation/free is O(pages) numpy work per
+request, not a jitted op.
+
+Pages are reserved for a request's WORST-CASE footprint at admission
+(`ceil(kv_need / page_size)` pages) and freed when the request completes —
+admission-time reservation keeps the engine preemption-free, exactly like
+the contiguous engine's submit-time capacity check, while many short
+requests now reserve only their own pages instead of whole worst-case
+slots.
+
+Page index 0 is a valid data page like any other; block-table rows are
+padded with 0 for unused entries. That is safe because attention masks
+every key position >= the request's current length, so a padded entry is
+never read as data.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class PageAllocator:
+    """Free-list allocator over `num_pages` fixed-size pages."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1:
+            raise ValueError("num_pages must be >= 1")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list: freshly freed pages are reused first (their planes
+        # are still warm in cache on real hardware)
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._owned: Dict[int, List[int]] = {}   # rid -> pages
+
+    # ------------------------------------------------------------- queries
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    def can_alloc(self, n_pages: int) -> bool:
+        return n_pages <= len(self._free)
+
+    # ------------------------------------------------------------ mutation
+    def alloc(self, rid: int, n_pages: int) -> List[int]:
+        """Reserve `n_pages` for request `rid`. Raises if the pool is short
+        (callers gate on `can_alloc` — the scheduler's admission check)."""
+        if rid in self._owned:
+            raise ValueError(f"request {rid} already holds pages")
+        if not self.can_alloc(n_pages):
+            raise RuntimeError(
+                f"page pool exhausted: need {n_pages}, free {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n_pages)]
+        self._owned[rid] = pages
+        return pages
+
+    def free(self, rid: int) -> int:
+        """Release every page owned by `rid`; returns how many."""
+        pages = self._owned.pop(rid, [])
+        self._free.extend(pages)
+        return len(pages)
+
+    def block_table_row(self, rid: int, width: int) -> np.ndarray:
+        """[width] int32 row for the device block table (0-padded)."""
+        pages = self._owned.get(rid, [])
+        if len(pages) > width:
+            raise ValueError(
+                f"request {rid} holds {len(pages)} pages > table width {width}")
+        row = np.zeros(width, np.int32)
+        row[: len(pages)] = pages
+        return row

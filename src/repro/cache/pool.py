@@ -1,0 +1,137 @@
+"""Device-side page pools: storage layout, insert, and page gather.
+
+One attention layer's decode cache is a POOL of fixed-size pages instead of
+a [slots, capacity] tensor:
+
+    bf16 pool : k/v each [P, page, kv, hd]            (P = num_pages)
+    AMS pool  : k/v each {hi   [P, page, kv, hd_p/2]  int8   (2 codes/byte)
+                          lsb  [P, page, kv, gw]      int32  (1 bit/k-group)
+                          scale[P, page, kv, 1]       f32}
+
+i.e. the AMS layout is exactly `repro.core.kv_quant`'s packed planes with a
+(page, slot-in-page, head) prefix. A request's logical position i lives at
+``page = block_table[slot, i // page_size], offset = i % page_size``; the
+same block-table row addresses every layer's pool (each layer has its own
+pool of the same geometry, vLLM-style).
+
+Inserts are one scatter per plane per layer: a suppressed write (idle slot,
+pos < 0) is routed to an out-of-range page index and dropped by the scatter
+— no full-pool select ever materializes. Each token is quantized ONCE at
+insert; history is never repacked.
+
+This module is model-free (no `repro.models` import) so the model layer can
+build on it without an import cycle.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import AMSFormat, get_scheme
+from repro.core.kv_quant import (
+    dequantize_kv,
+    kv_bytes,
+    packed_head_dim,
+    quantize_kv,
+)
+
+from .config import CacheConfig
+
+
+# ---------------------------------------------------------------- creation
+def make_gqa_page_pool(ccfg: CacheConfig, kv: int, hd: int,
+                       dtype=jnp.bfloat16) -> Dict:
+    """Zero-initialized k/v page pools for one GQA layer."""
+    P, page = ccfg.num_pages, ccfg.page_size
+    if ccfg.quantized:
+        scheme = get_scheme(ccfg.kv_scheme)
+        hd_p = packed_head_dim(hd, scheme)
+        gw = -(-(hd_p // scheme.k) // 32)
+
+        def planes():
+            return {"hi": jnp.zeros((P, page, kv, hd_p // 2), jnp.int8),
+                    "lsb": jnp.zeros((P, page, kv, gw), jnp.int32),
+                    "scale": jnp.zeros((P, page, kv, 1), jnp.float32)}
+
+        return {"k": planes(), "v": planes()}
+    return {"k": jnp.zeros((P, page, kv, hd), dtype),
+            "v": jnp.zeros((P, page, kv, hd), dtype)}
+
+
+# ------------------------------------------------------------------ insert
+def _page_offset(pos, block_table, ccfg: CacheConfig, num_pages: int):
+    """Physical (page, offset) per slot; suppressed writes -> page index P
+    (out of range, dropped by the scatter's mode='drop')."""
+    B = pos.shape[0]
+    logical = jnp.clip(pos // ccfg.page_size, 0, block_table.shape[1] - 1)
+    page = block_table[jnp.arange(B), logical]
+    page = jnp.where(pos >= 0, page, num_pages)
+    off = jnp.clip(pos % ccfg.page_size, 0, ccfg.page_size - 1)
+    return page, off
+
+
+def paged_insert(pool: Dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 pos: jnp.ndarray, block_table: jnp.ndarray,
+                 ccfg: CacheConfig) -> Dict:
+    """Write this tick's K/V vectors ([B, 1, kv, hd]) into the layer pool.
+
+    ``pos`` is [B] int32 per-slot insert positions (negative = idle slot,
+    write dropped); ``block_table`` is [B, max_pages_per_seq] int32.
+    """
+    num_pages = jax.tree.leaves(pool["k"])[0].shape[0]
+    page, off = _page_offset(jnp.asarray(pos, jnp.int32), block_table,
+                             ccfg, num_pages)
+
+    def write(leaf, val):
+        return leaf.at[page, off].set(val.astype(leaf.dtype), mode="drop")
+
+    if ccfg.quantized:
+        scheme = get_scheme(ccfg.kv_scheme)
+        out = {}
+        for name, new in (("k", k_new), ("v", v_new)):
+            q = quantize_kv(new[:, 0], scheme, ccfg.kv_strategy)  # [B, kv, *]
+            out[name] = {pl: write(pool[name][pl], q[pl])
+                         for pl in ("hi", "lsb", "scale")}
+        return out
+    return {"k": write(pool["k"], k_new[:, 0]),
+            "v": write(pool["v"], v_new[:, 0])}
+
+
+# ------------------------------------------------------------------ gather
+def gather_pages(leaf: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    """[P, page, ...] pool leaf -> [B, max_pages*page, ...] per-slot view."""
+    B, mp = block_table.shape
+    g = jnp.take(leaf, block_table.reshape(-1), axis=0)
+    return g.reshape(B, mp * leaf.shape[1], *leaf.shape[2:])
+
+
+def gather_kv(pool: Dict, block_table: jnp.ndarray, hd: int,
+              ccfg: CacheConfig, dtype=jnp.bfloat16):
+    """Materialize (k, v) [B, S_max, kv, hd] views of a layer pool, restoring
+    AMS planes to their exact lattice values when the pool is quantized."""
+    if ccfg.quantized:
+        scheme = get_scheme(ccfg.kv_scheme)
+        k_pl, v_pl = ({pl: gather_pages(pool[n][pl], block_table)
+                       for pl in ("hi", "lsb", "scale")} for n in ("k", "v"))
+        return (dequantize_kv(k_pl, hd, scheme, dtype),
+                dequantize_kv(v_pl, hd, scheme, dtype))
+    return (gather_pages(pool["k"], block_table).astype(dtype),
+            gather_pages(pool["v"], block_table).astype(dtype))
+
+
+# -------------------------------------------------------------- accounting
+def pool_bytes_per_token(kv: int, hd: int, ccfg: CacheConfig) -> int:
+    """Cache bytes one token occupies in one layer (k + v)."""
+    if ccfg.quantized:
+        packed, _ = kv_bytes(hd, get_scheme(ccfg.kv_scheme))
+        return 2 * kv * packed
+    return 2 * kv * hd * 2
+
+
+def compression_vs_bf16(kv: int, hd: int, ccfg: CacheConfig) -> float:
+    """bf16 bytes / this cache-mode bytes, per token per layer."""
+    bf16 = 2 * kv * hd * 2
+    return bf16 / pool_bytes_per_token(kv, hd, ccfg)

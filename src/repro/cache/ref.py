@@ -1,0 +1,48 @@
+"""Lattice-exact reference for paged attention: gather -> dequantize -> attend.
+
+The oracle the Pallas kernel is tested against, and the production XLA
+fallback when Pallas is unavailable on the target. Pages are gathered into
+a per-slot [B, max_pages*page, kv, hd] view via the block table, AMS planes
+are restored to their EXACT lattice values (`dequantize_kv` is bit-faithful
+to the packed codes), and the existing `flash_decode` online-softmax core
+attends with per-slot lengths.
+
+Two exactness properties tests pin:
+
+  * paged-bf16 with ``max_pages*page == capacity`` is BIT-IDENTICAL to the
+    contiguous-slot decode path — the gathered view has the same shape and
+    the same values at every valid position, and masked positions contribute
+    exact zeros either way;
+  * paged-AMS dequantizes to the same lattice points as a direct
+    ``quantize_kv``/``dequantize_kv`` round trip — attention then differs
+    from the Pallas kernel only by f32 reduction order.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .config import CacheConfig
+from .pool import gather_kv
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,              # [B, H, hd] (UNSCALED query)
+    pool,                        # layer pool (see cache.pool)
+    lengths: jnp.ndarray,        # [B] int32 valid keys per slot (<=0: idle)
+    block_table: jnp.ndarray,    # [B, max_pages_per_seq] int32
+    ccfg: CacheConfig,
+    *,
+    kv_map: np.ndarray,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    # function-level import: models.attention layers on top of repro.cache
+    from repro.models.attention import flash_decode
+
+    hd = q.shape[-1]
+    dtype = jnp.float32 if ccfg.quantized else q.dtype
+    k, v = gather_kv(pool, block_table, hd, ccfg, dtype=dtype)
+    return flash_decode(q, k, v, lengths, kv_map=kv_map, scale=scale)

@@ -14,12 +14,21 @@ Each token is quantized ONCE at insert (no repacking of history), so decode
 cost is one dequant pass over the cache — on TPU that rides the same
 restore-before-MXU pattern as the weight kernel.
 
-This module is the validated numerical core + packed container; wiring into
-`flash_decode` is the documented integration point (DESIGN.md §Future).
+This module is the validated numerical core + packed container. It is wired
+into decode by the paged KV-cache subsystem (`repro.cache`): page pools store
+exactly these planes and the paged-attention kernel restores them on the fly
+inside the attention loop — see docs/paged_cache.md for the page layout and
+block-table walkthrough.
+
+Head dims that are not a multiple of the sharing group k (or are odd, which
+breaks nibble pairing) are zero-padded to the packing width internally;
+`dequantize_kv` slices the pad back off. Zero-length and singleton token
+axes round-trip too — those are exactly the shapes the paged kernel feeds.
 """
 
 from __future__ import annotations
 
+import math
 from typing import Tuple
 
 import jax
@@ -33,21 +42,30 @@ from .rtn import quantize_rtn
 KV_SCHEME = get_scheme("fp4.25-e2m2")
 
 
+def packed_head_dim(hd: int, scheme: AMSFormat = KV_SCHEME) -> int:
+    """Padded head dim the packed planes actually store: a multiple of the
+    sharing group k AND even (nibble pairing)."""
+    return -(-hd // math.lcm(scheme.k, 2)) * math.lcm(scheme.k, 2)
+
+
 def quantize_kv(x: jnp.ndarray, scheme: AMSFormat = KV_SCHEME,
                 strategy: str = "set_lsb"):
     """Quantize [..., hd] vectors -> packed planes.
 
-    Returns dict: hi int8 [..., hd/2] (two 4-bit codes per byte),
-    lsb int32 [..., hd/128] bitplane (one bit per k-group), scale f32 [..., 1].
-    Requires hd % (32 * k) == 0 (hd=64/128/256 all qualify for k=4... hd%128;
-    for hd in {64, 96} the lsb plane packs ceil groups into one int32).
+    Returns dict: hi int8 [..., hd_p/2] (two 4-bit codes per byte),
+    lsb int32 [..., ceil(hd_p/k/32)] bitplane (one bit per k-group),
+    scale f32 [..., 1] — where hd_p = `packed_head_dim(hd)` (zero-padded when
+    hd is odd or not a multiple of k; the pad is sliced off on dequantize).
     """
     fmt = scheme.base
     k = scheme.k
     hd = x.shape[-1]
-    assert hd % k == 0
+    hd_p = packed_head_dim(hd, scheme)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, hd).astype(jnp.float32)   # [M, hd]
+    if hd_p != hd:
+        x2 = jnp.pad(x2, ((0, 0), (0, hd_p - hd)))
+    hd = hd_p
     # channel-wise = per-vector scale: treat vectors as columns
     wt = x2.T                                    # [hd, M]
     codes, scale = quantize_rtn(wt, fmt)         # codes [hd, M], scale [M]
@@ -70,29 +88,50 @@ def quantize_kv(x: jnp.ndarray, scheme: AMSFormat = KV_SCHEME,
     }
 
 
+def codes_from_planes(hi: jnp.ndarray, lsb: jnp.ndarray,
+                      k: int) -> jnp.ndarray:
+    """Packed planes -> full codes [..., hd_p]: split the hi bytes into
+    nibbles (position order) and OR the shared LSB back into every group
+    member's bit 0. hi: [..., hd_p/2] (raw bytes), lsb: [..., gw] int32.
+
+    Pure SHIFT/AND/OR + reshape ops, so this is THE single definition of
+    the plane layout — `dequantize_kv` and the Pallas paged-attention
+    kernel (`repro.cache.paged_attention`) both restore through it.
+    """
+    lead = hi.shape[:-1]
+    hd_p = hi.shape[-1] * 2
+    byte = hi.astype(jnp.int32) & 0xFF
+    codes_hi = jnp.stack([byte & 0xF, (byte >> 4) & 0xF],
+                         axis=-1).reshape(*lead, hd_p)
+    g = hd_p // k
+    gw = lsb.shape[-1]
+    bits = jnp.stack([(lsb >> j) & 1 for j in range(32)],
+                     axis=-1).reshape(*lead, gw * 32)[..., :g]
+    lsb_full = jnp.broadcast_to(bits[..., None],
+                                (*lead, g, k)).reshape(*lead, hd_p)
+    return (codes_hi << 1) | lsb_full
+
+
 def dequantize_kv(q, hd: int, scheme: AMSFormat = KV_SCHEME,
                   dtype=jnp.bfloat16) -> jnp.ndarray:
-    """Packed planes -> [..., hd] values (bit restore, same as the kernel)."""
+    """Packed planes -> [..., hd] values (bit restore, same as the kernel).
+
+    ``hd`` is the TRUE head dim; the planes store `packed_head_dim(hd)`
+    columns and any pad tail is sliced off here.
+    """
     fmt = scheme.base
     k = scheme.k
     lead = q["hi"].shape[:-1]
-    hi = q["hi"].reshape(-1, hd // 2).astype(jnp.int32) & 0xFF
-    lo_n = hi & 0xF
-    hi_n = (hi >> 4) & 0xF
-    codes_hi = jnp.stack([lo_n, hi_n], axis=-1).reshape(-1, hd)
-    g = hd // k
-    gw = q["lsb"].shape[-1]
-    lsb_words = q["lsb"].reshape(-1, gw)
-    bits = jnp.stack([(lsb_words >> j) & 1 for j in range(32)],
-                     axis=-1).reshape(-1, gw * 32)[:, :g]
-    lsb_full = jnp.repeat(bits, k, axis=-1)
-    codes = (codes_hi << 1) | lsb_full
+    hd_p = q["hi"].shape[-1] * 2
+    codes = codes_from_planes(q["hi"].reshape(-1, hd_p // 2),
+                              q["lsb"].reshape(-1, q["lsb"].shape[-1]), k)
     vals = code_to_value(fmt, codes) * q["scale"].reshape(-1, 1)
-    return vals.reshape(*lead, hd).astype(dtype)
+    return vals.reshape(*lead, hd_p)[..., :hd].astype(dtype)
 
 
 def kv_bytes(hd: int, scheme: AMSFormat = KV_SCHEME) -> Tuple[int, int]:
     """(packed bytes per vector, bf16 bytes per vector)."""
-    g = hd // scheme.k
+    hd_p = packed_head_dim(hd, scheme)
+    g = hd_p // scheme.k
     gw = -(-g // 32)
-    return hd // 2 + 4 * gw + 4, 2 * hd
+    return hd_p // 2 + 4 * gw + 4, 2 * hd

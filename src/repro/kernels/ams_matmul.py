@@ -40,11 +40,11 @@ if _CompilerParams is None:  # pragma: no cover - future jax renames
 
 
 # --------------------------------------------------------------------------
-# In-kernel bit restoration (shared by both containers)
+# In-kernel bit restoration (shared by both containers AND by the paged
+# KV-cache attention kernel in repro.cache.paged_attention)
 # --------------------------------------------------------------------------
-def _decode_to_f32(codes: jnp.ndarray, lay: PackLayout) -> jnp.ndarray:
+def decode_codes_to_f32(codes: jnp.ndarray, fmt) -> jnp.ndarray:
     """SHIFT/AND/OR restoration of full codes -> f32 values (bit-exact)."""
-    fmt = lay.scheme.base
     m, e, bias = fmt.man_bits, fmt.exp_bits, fmt.bias
     M = codes & ((1 << m) - 1)
     E = (codes >> m) & ((1 << e) - 1)
@@ -102,7 +102,7 @@ def _kernel_planes(x_ref, hi_ref, lsb_ref, scale_ref, o_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     codes = _unpack_planes(hi_ref[...], lsb_ref[...], lay, bk, bn)
-    w = _decode_to_f32(codes, lay).astype(jnp.bfloat16)
+    w = decode_codes_to_f32(codes, lay.scheme.base).astype(jnp.bfloat16)
     x = x_ref[...].astype(jnp.bfloat16)
     acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
@@ -120,7 +120,7 @@ def _kernel_fp533(x_ref, hi_ref, scale_ref, o_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     codes = _unpack_fp533(hi_ref[...], bk, bn)
-    w = _decode_to_f32(codes, lay).astype(jnp.bfloat16)
+    w = decode_codes_to_f32(codes, lay.scheme.base).astype(jnp.bfloat16)
     x = x_ref[...].astype(jnp.bfloat16)
     acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 

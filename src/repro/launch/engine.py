@@ -9,12 +9,18 @@ tick, streaming the packed planes through `apply_linear`'s ``ref`` /
 
 Architecture (Orca-style iteration-level scheduling):
 
-  * the KV cache is a fixed [slots, capacity] tensor; each slot holds one
-    request with its own position counter (`decode_step` takes [B] per-slot
-    positions; negative = idle slot, cache write suppressed);
+  * the KV cache is either a fixed [slots, capacity] tensor (contiguous
+    mode) or a POOL of fixed-size pages addressed through per-request
+    block tables (`repro.cache`, paged-bf16 / paged-AMS modes — the AMS
+    pool stores each K/V vector in the paper's packed e2m2 planes,
+    quantized once at insert). Each slot holds one request with its own
+    position counter (`decode_step` takes [B] per-slot positions;
+    negative = idle slot, cache write suppressed);
   * a FIFO scheduler (`launch.scheduler`) admits queued requests into freed
-    slots; admission is capacity-checked at submit time so nothing is ever
-    preempted mid-flight;
+    slots; admission is capacity-checked at submit time (contiguous) or
+    gated on the free-PAGE budget at admit time (paged — short requests
+    reserve only their own pages, not worst-case slots), so nothing is
+    ever preempted mid-flight;
   * prefill is CHUNKED INTO THE DECODE BATCH: an admitted request's prompt
     (and any modality prefix embeddings) is fed one position per tick
     through the same decode step that serves decoding slots, its logits
@@ -49,13 +55,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import CacheConfig, PageAllocator, compression_vs_bf16
 from repro.configs import get_config
 from repro.configs.base import RunConfig
 from repro.core.policy import QuantPolicy
 from repro.launch.mesh import make_driver_mesh, use_mesh
 from repro.launch.scheduler import FIFOScheduler, Request
 from repro.launch.steps import build_engine_step
-from repro.models import init_params, make_cache, reset_cache_slot
+from repro.models import init_params, make_cache, model_dims, reset_cache_slot
 from repro.models.common import quantize_params
 
 
@@ -66,6 +73,7 @@ class ServeEngine:
                  scheme: str = "fp5.33-e2m3", strategy: str = "set_lsb",
                  impl: str = "ref", mesh_kind: str = "none",
                  slots: int = 4, capacity: int = 128, max_queue: Optional[int] = None,
+                 cache_config: Optional[CacheConfig] = None,
                  seed: int = 0, params=None, verbose: bool = False):
         cfg = get_config(arch)
         if reduced:
@@ -74,6 +82,10 @@ class ServeEngine:
         self.scheme = scheme
         self.slots = slots
         self.capacity = capacity
+        ccfg = cache_config or CacheConfig()
+        if ccfg.paged:
+            ccfg = ccfg.sized(capacity=capacity, slots=slots)
+        self.cache_cfg = ccfg
         quant = None
         if scheme != "fp16":
             quant = QuantPolicy(scheme=scheme, strategy=strategy, impl=impl,
@@ -96,15 +108,33 @@ class ServeEngine:
                           f"in {time.time()-t0:.1f}s", flush=True)
             self.params = params
             self.cache = make_cache(cfg, slots, capacity, tp=tp,
-                                    dtype=jnp.bfloat16)
-            self._step, _, _ = build_engine_step(self.mesh, cfg, self.rcfg)
-            self._reset = jax.jit(reset_cache_slot, donate_argnums=(0,))
+                                    dtype=jnp.bfloat16,
+                                    cache_cfg=ccfg if ccfg.paged else None)
+            self._step, _, _ = build_engine_step(
+                self.mesh, cfg, self.rcfg,
+                cache_cfg=ccfg if ccfg.paged else None)
+            # paged pools need no per-slot reset: positions are written
+            # front-to-front per request, so every valid key is fresh, and
+            # recurrent-state families are rejected by check_paged_support
+            self._reset = (None if ccfg.paged else
+                           jax.jit(reset_cache_slot, donate_argnums=(0,)))
 
         # host-side slot state
-        self.sched = FIFOScheduler(capacity, max_queue=max_queue)
+        if ccfg.paged:
+            self.alloc: Optional[PageAllocator] = PageAllocator(
+                ccfg.num_pages, ccfg.page_size)
+            self.block_tables = np.zeros(
+                (slots, ccfg.max_pages_per_seq), np.int32)
+            # a request can never outgrow its block-table row or the pool
+            eff_cap = min(ccfg.max_pages_per_seq, ccfg.num_pages) * ccfg.page_size
+        else:
+            self.alloc = None
+            self.block_tables = None
+            eff_cap = capacity
+        self.sched = FIFOScheduler(eff_cap, max_queue=max_queue)
         self.active: List[Optional[Request]] = [None] * slots
-        self.fed = np.zeros(slots, np.int64)   # inputs consumed == insert pos
-        self.last_token = np.zeros(slots, np.int64)
+        self.fed = np.zeros(slots, np.int32)   # inputs consumed == insert pos
+        self.last_token = np.zeros(slots, np.int32)
         self.tick = 0
         self.finished: List[Request] = []
         self._rid = itertools.count()
@@ -114,8 +144,8 @@ class ServeEngine:
     # ------------------------------------------------------------- frontend
     def submit(self, prompt, max_tokens: int,
                prefix_embeds=None) -> Request:
-        """Enqueue a request. Raises if it can never fit a cache slot."""
-        prompt = np.asarray(prompt, np.int64).reshape(-1)
+        """Enqueue a request. Raises if it can never fit a cache slot.
+        (`Request.__post_init__` normalizes the prompt to [P] int32.)"""
         if prefix_embeds is not None:
             prefix_embeds = np.asarray(prefix_embeds, np.float32)
             if self.cfg.num_prefix_embeds == 0:
@@ -146,13 +176,38 @@ class ServeEngine:
         Returns {"finished": [Request], "generated": int, "active": int}.
         """
         t0 = time.perf_counter()
+        paged = self.cache_cfg.paged
         with use_mesh(self.mesh):
-            # 1) admit queued requests into free slots (reset slot caches
-            #    first — recurrent SSM/RG-LRU states integrate garbage while
-            #    a slot idles; KV entries are position-masked but cleared too)
+            # 1) admit queued requests into free slots (contiguous: reset
+            #    slot caches first — recurrent SSM/RG-LRU states integrate
+            #    garbage while a slot idles; KV entries are position-masked
+            #    but cleared too. Paged: reserve the request's worst-case
+            #    pages and publish its block-table row instead; admission is
+            #    additionally gated on the free-page budget via `fits`)
             free = [s for s, r in enumerate(self.active) if r is None]
-            for slot, req in self.sched.admit(free, self.tick):
-                self.cache = self._reset(self.cache, slot)
+            fits = None
+            if paged:
+                # pages are allocated after admit() returns, so the budget
+                # check must count pages already promised THIS tick — admit's
+                # contract (fits(head) True => head is admitted) makes the
+                # running counter safe
+                promised = 0
+
+                def fits(r):
+                    nonlocal promised
+                    need = self.alloc.pages_needed(r.kv_need)
+                    if promised + need > self.alloc.free_pages:
+                        return False
+                    promised += need
+                    return True
+            for slot, req in self.sched.admit(free, self.tick, fits=fits):
+                if paged:
+                    req.pages = self.alloc.alloc(
+                        req.rid, self.alloc.pages_needed(req.kv_need))
+                    self.block_tables[slot] = self.alloc.block_table_row(
+                        req.rid, self.block_tables.shape[1])
+                else:
+                    self.cache = self._reset(self.cache, slot)
                 self.active[slot] = req
                 self.fed[slot] = 0
 
@@ -185,6 +240,8 @@ class ServeEngine:
             # 3) one jitted step for every slot
             args = (self.params, jnp.asarray(token), jnp.asarray(pos),
                     self.cache)
+            if paged:
+                args += (jnp.asarray(self.block_tables),)
             if use_prefix:
                 args += (jnp.asarray(embeds), jnp.asarray(emask))
             next_tok, self.cache = self._step(*args)
@@ -208,6 +265,9 @@ class ServeEngine:
                         self.finished.append(req)
                         finished.append(req)
                         self.active[s] = None
+                        if paged:
+                            self.alloc.free(req.rid)
+                            self.block_tables[s] = 0
         self.tick += 1
         self._tick_s.append(time.perf_counter() - t0)
         self._tick_tokens.append(generated)
@@ -232,12 +292,26 @@ class ServeEngine:
         self._tick_tokens = []
         self.finished = []
 
+    # ----------------------------------------------------------- accounting
+    def kv_bytes_per_token(self) -> int:
+        """Cache bytes one token occupies across all layers, in the active
+        cache mode (bf16 slot/page storage, or AMS packed planes)."""
+        from repro.cache.pool import pool_bytes_per_token
+        dims = model_dims(self.cfg, self.mesh.shape["model"])
+        return self.cfg.num_layers * pool_bytes_per_token(
+            dims.kv, dims.hd, self.cache_cfg)
+
+    def kv_compression_vs_bf16(self) -> float:
+        """bf16-cache bytes / active-mode bytes per token (1.0 for bf16)."""
+        dims = model_dims(self.cfg, self.mesh.shape["model"])
+        return compression_vs_bf16(dims.kv, dims.hd, self.cache_cfg)
+
     def stats(self) -> Dict[str, float]:
         tick_s = np.asarray(self._tick_s) if self._tick_s else np.zeros(1)
         tok = np.asarray(self._tick_tokens) if self._tick_tokens else np.zeros(1)
         total_s = float(tick_s.sum())
         decode_ticks = tick_s[tok > 0]
-        return {
+        out = {
             "ticks": len(self._tick_s),
             "requests_finished": len(self.finished),
             "tokens_generated": int(tok.sum()),
@@ -247,4 +321,9 @@ class ServeEngine:
             "decode_ms_p99": (1e3 * float(np.percentile(decode_ticks, 99))
                               if decode_ticks.size else 0.0),
             "queue_depth": self.sched.queue_depth,
+            "kv_bytes_per_token": self.kv_bytes_per_token(),
+            "kv_compression_vs_bf16": self.kv_compression_vs_bf16(),
         }
+        if self.alloc is not None:
+            out["free_pages"] = self.alloc.free_pages
+        return out

@@ -8,16 +8,19 @@ prompt + generated tokens) fits one cache slot, so the engine never has to
 preempt or re-admit mid-flight.
 
 Policy is deliberately the simplest thing that is production-shaped: strict
-FIFO admission into any free slot (no reordering, no priority tiers). The
-interface (``submit`` / ``admit`` / ``queue_depth``) is what a later
-shortest-job-first or paged-KV scheduler would keep.
+FIFO admission into any free slot (no reordering, no priority tiers). For
+the paged KV cache the engine passes ``admit(..., fits=...)`` — the
+free-PAGE budget check — so admission is gated on the pooled page supply
+instead of worst-case per-slot capacity; strict FIFO is preserved by
+head-of-line blocking (a queued request that doesn't fit stops admission
+rather than being jumped).
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
@@ -37,6 +40,12 @@ class Request:
     finish_tick: int = -1
     slot: int = -1
     tokens: List[int] = dataclasses.field(default_factory=list)
+    pages: List[int] = dataclasses.field(default_factory=list)  # paged mode
+
+    def __post_init__(self):
+        # the [P] int32 contract above is load-bearing: the engine feeds
+        # prompt tokens straight into an int32 device buffer
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
 
     @property
     def n_prefix(self) -> int:
@@ -88,13 +97,21 @@ class FIFOScheduler:
         self._queue.append(req)
         return req
 
-    def admit(self, free_slots: List[int], tick: int) -> List[Tuple[int, Request]]:
+    def admit(self, free_slots: List[int], tick: int,
+              fits: Optional[Callable[[Request], bool]] = None,
+              ) -> List[Tuple[int, Request]]:
         """Assign queued requests to free slots, FIFO order. Returns
         (slot, request) pairs; the engine resets each slot's cache row
-        before the request's first token is fed."""
+        before the request's first token is fed.
+
+        ``fits(req)`` (optional) is an extra admission gate — the paged
+        engine passes its free-page budget check. A queue head that does
+        not fit BLOCKS admission (strict FIFO, no overtaking)."""
         placed = []
         for slot in free_slots:
             if not self._queue:
+                break
+            if fits is not None and not fits(self._queue[0]):
                 break
             req = self._queue.popleft()
             req.admit_tick = tick

@@ -47,7 +47,7 @@ def generate(arch: str, *, reduced=True, scheme="fp5.33-e2m3",
     rng = np.random.default_rng(seed)
     if prompts is None:
         prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len))
-    prompts = np.asarray(prompts, np.int64)
+    prompts = np.asarray(prompts, np.int32)
     batch, prompt_len = prompts.shape  # explicit prompts win over the kwargs
     cap = capacity or (prompt_len + gen_tokens + cfg.num_prefix_embeds)
     if cfg.num_prefix_embeds and prefix_embeds is None:
@@ -62,7 +62,7 @@ def generate(arch: str, *, reduced=True, scheme="fp5.33-e2m3",
                                       if prefix_embeds is not None else None))
             for b in range(prompts.shape[0])]
     stats = eng.run()
-    toks = np.stack([np.asarray(r.tokens, np.int64) for r in reqs])
+    toks = np.stack([np.asarray(r.tokens, np.int32) for r in reqs])
     return toks, stats
 
 

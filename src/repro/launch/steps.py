@@ -282,7 +282,8 @@ def build_serve_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
                                     cache=c_shard, pos=scalar)
 
 
-def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
+def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
+                      cache_cfg=None):
     """Slot-masked decode step for the continuous-batching engine.
 
     One tick serves every slot of the fixed-capacity KV cache at its OWN
@@ -295,37 +296,61 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
     Greedy sampling (argmax) runs on-device so each tick moves only [B]
     int32s back to the host scheduler.
 
-    step(params, token [B], pos [B], cache[, embeds [B, D], embed_mask [B]])
-        -> (next_token [B], cache)
+    step(params, token [B], pos [B], cache[, block_tables [B, MP]]
+         [, embeds [B, D], embed_mask [B]]) -> (next_token [B], cache)
 
     The embeds override exists only when the config has a modality frontend
     (``num_prefix_embeds > 0``): prefix embeddings stream through the same
     step during prefill instead of a separate prefill program.
+
+    With a paged ``cache_cfg`` (see `repro.cache.CacheConfig`), the cache
+    pytree holds PAGE POOLS and the step takes the per-slot block tables as
+    an extra [B, max_pages_per_seq] int32 arg after the cache. Pools are
+    replicated over the mesh (sharding pools over kv heads is the
+    documented next step); the slot-masking contract is unchanged.
     """
     ctx = make_ctx(mesh, "decode")
-    if ctx.tp == 1:  # trivial model axis: skip the seq-shard shard_map path
+    paged = cache_cfg is not None and cache_cfg.paged
+    if ctx.tp == 1 or paged:  # trivial model axis / pooled pages: no
         ctx = dataclasses.replace(ctx, seq_shard_cache=False)
     B, S = rcfg.global_batch, rcfg.seq_len
     dp = batch_dp(mesh, B)
     policy = rcfg.quant if rcfg.quantized else None
     has_prefix = cfg.num_prefix_embeds > 0
 
-    def core(params, token, pos, cache, embeds=None, embed_mask=None):
+    def core(params, token, pos, cache, block_tables=None, embeds=None,
+             embed_mask=None):
         logits, cache = decode_step(
             params, token, cache, pos, cfg, tp=ctx.tp, policy=policy,
-            ctx=ctx, dtype=jnp.bfloat16, embeds=embeds, embed_mask=embed_mask)
+            ctx=ctx, dtype=jnp.bfloat16, embeds=embeds, embed_mask=embed_mask,
+            block_tables=block_tables, cache_cfg=cache_cfg)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
     pshape = quantized_param_shapes(cfg, rcfg, ctx.tp)
     p_shard = SH.params_shardings(pshape, mesh, fsdp=False)
     cache_shape = jax.eval_shape(
-        lambda: make_cache(cfg, B, S, tp=ctx.tp, dtype=jnp.bfloat16))
-    c_shard = SH.cache_shardings(cache_shape, mesh, dp=dp, seq_shard=True)
+        lambda: make_cache(cfg, B, S, tp=ctx.tp, dtype=jnp.bfloat16,
+                           cache_cfg=cache_cfg))
+    if paged:
+        c_shard = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                               cache_shape)
+    else:
+        c_shard = SH.cache_shardings(cache_shape, mesh, dp=dp, seq_shard=True)
     tok_shard = NamedSharding(mesh, P(dp))
 
-    if has_prefix:
+    if paged and has_prefix:
+        def engine_fn(params, token, pos, cache, block_tables, embeds,
+                      embed_mask):
+            return core(params, token, pos, cache, block_tables, embeds,
+                        embed_mask)
+        in_shardings = (p_shard, None, None, c_shard, None, None, None)
+    elif paged:
+        def engine_fn(params, token, pos, cache, block_tables):
+            return core(params, token, pos, cache, block_tables)
+        in_shardings = (p_shard, None, None, c_shard, None)
+    elif has_prefix:
         def engine_fn(params, token, pos, cache, embeds, embed_mask):
-            return core(params, token, pos, cache, embeds, embed_mask)
+            return core(params, token, pos, cache, None, embeds, embed_mask)
         in_shardings = (p_shard, None, None, c_shard, None, None)
     else:
         def engine_fn(params, token, pos, cache):
@@ -341,6 +366,9 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
         pos=jax.ShapeDtypeStruct((B,), jnp.int32, sharding=tok_shard),
         cache=cache_shape,
     )
+    if paged:
+        arg_shapes["block_tables"] = jax.ShapeDtypeStruct(
+            (B, cache_cfg.max_pages_per_seq), jnp.int32)
     if has_prefix:
         arg_shapes["embeds"] = jax.ShapeDtypeStruct((B, cfg.d_model),
                                                     jnp.float32)

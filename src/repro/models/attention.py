@@ -291,6 +291,33 @@ def gqa_decode_core(q, k_new, v_new, cache_k, cache_v, pos, *,
     return o, cache_k, cache_v
 
 
+def gqa_attn_decode_paged(p, x, pool, pos, block_tables, cfg, dims, *,
+                          policy=None, cache_cfg=None):
+    """Paged-cache decode step: x [B, 1, D]; ``pool`` is one layer's page
+    pool (repro.cache.pool layout); ``block_tables`` [B, max_pages] int32.
+
+    Each slot's new K/V vector is quantized ONCE at insert (paged-AMS) or
+    stored bf16 (paged-bf16); attention walks the block table via the
+    configured impl (``ref`` gather-dequantize oracle or the Pallas
+    kernel). Returns (out, new pool)."""
+    from repro.cache import paged_attend, paged_insert
+
+    B = x.shape[0]
+    hd = dims.hd
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.full((B, 1), pos,
+                                                            jnp.int32)
+    q, k, v = gqa_qkv(p, x, cfg, dims, positions, policy)
+    pool = paged_insert(pool, k, v, pos, block_tables, cache_cfg)
+    kvm = kv_index_map(dims.H, dims.H_true, dims.kv)
+    lengths = jnp.where(pos >= 0, pos + 1, 0)
+    o = paged_attend(q[:, 0], pool, lengths, block_tables, cache_cfg,
+                     kv_map=kvm)
+    o = o * dims.head_mask[None, :, None].astype(o.dtype)
+    o = o.reshape(B, 1, dims.H * hd)
+    return apply_linear(p["wo"], o, policy), pool
+
+
 def gqa_attn_decode(p, x, cache_k, cache_v, pos, cfg, dims, *,
                     policy=None, core_wrap=None, window=0, ring=False):
     """x: [B, 1, D]; caches [B, S_loc, kv, hd]. Returns (out, new caches).

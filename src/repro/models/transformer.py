@@ -178,9 +178,11 @@ def _seq_core_wrap(ctx: ParallelCtx, n_caches: int):
 
 
 def block_decode(p, x, cache, pos, kind, cfg, dims, *, policy=None,
-                 ctx: Optional[ParallelCtx]):
+                 ctx: Optional[ParallelCtx], block_tables=None,
+                 cache_cfg=None):
     """x: [B, 1, D]. Returns (x, new_cache)."""
     seq_sharded = ctx is not None and ctx.mesh is not None and ctx.seq_shard_cache
+    paged = cache_cfg is not None and cache_cfg.paged
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if kind == "mamba":
         out, (conv_st, ssm_st) = S.mamba_decode(
@@ -197,6 +199,11 @@ def block_decode(p, x, cache, pos, kind, cfg, dims, *, policy=None,
                                      policy=policy, core_wrap=wrap)
         x = x + out
         cache = {"kv": ckv}
+    elif paged:
+        out, cache = A.gqa_attn_decode_paged(
+            p["attn"], h, cache, pos, block_tables, cfg, dims,
+            policy=policy, cache_cfg=cache_cfg)
+        x = x + out
     else:
         window = cfg.sliding_window if kind == "attn" else 0
         wrap = _seq_core_wrap(ctx, 2) if seq_sharded else None
@@ -234,22 +241,50 @@ def block_cache_shape(cfg, dims: Dims, kind: str, B: int, cap: int, dtype):
             "v": jnp.zeros((B, S_cap, dims.kv, dims.hd), dtype)}
 
 
-def make_cache(cfg, B: int, cap: int, tp: int = 1, dtype=jnp.bfloat16):
-    """Zero-initialized cache pytree matching the params layout."""
+def check_paged_support(cfg):
+    """Paged KV caching covers plain GQA attention layers only (for now):
+    sliding-window ring caches, MLA's compressed stream, and SSM/RG-LRU
+    recurrent states keep their contiguous layouts (docs/paged_cache.md
+    §Extensions)."""
+    pat = layer_pattern(cfg)
+    bad = [k for k in pat if k not in ("gqa", "gqa_moe")]
+    if bad:
+        raise NotImplementedError(
+            f"paged KV cache supports gqa/gqa_moe layers only; "
+            f"{cfg.name} has {sorted(set(bad))}")
+    if cfg.sliding_window:
+        raise NotImplementedError(
+            "paged KV cache does not support sliding-window ring caches yet")
+
+
+def make_cache(cfg, B: int, cap: int, tp: int = 1, dtype=jnp.bfloat16,
+               cache_cfg=None):
+    """Zero-initialized cache pytree matching the params layout.
+
+    With a paged ``cache_cfg`` the per-layer KV leaves are PAGE POOLS
+    (`repro.cache.pool` layout, no batch dim — slots address them through
+    block tables); otherwise the fixed [B, cap] slot layout."""
     dims = model_dims(cfg, tp)
     pat = layer_pattern(cfg)
     L, Pn = cfg.num_layers, len(pat)
     G, R = L // Pn, L % Pn
+    paged = cache_cfg is not None and cache_cfg.paged
+    if paged:
+        from repro.cache import make_gqa_page_pool
+        check_paged_support(cfg)
+
+    def block(kind):
+        if paged:
+            return make_gqa_page_pool(cache_cfg, dims.kv, dims.hd, dtype)
+        return block_cache_shape(cfg, dims, kind, B, cap, dtype)
 
     def group():
-        return {f"sub{i}": block_cache_shape(cfg, dims, pat[i], B, cap, dtype)
-                for i in range(Pn)}
+        return {f"sub{i}": block(pat[i]) for i in range(Pn)}
 
     cache = {"layers": jax.tree.map(
         lambda a: jnp.broadcast_to(a, (G,) + a.shape).copy() if G else a, group())}
     if R:
-        cache["tail"] = {f"sub{i}": block_cache_shape(cfg, dims, pat[i], B, cap, dtype)
-                         for i in range(R)}
+        cache["tail"] = {f"sub{i}": block(pat[i]) for i in range(R)}
     return cache
 
 
@@ -350,10 +385,15 @@ def forward_seq(params, tokens, cfg, *, tp=1, policy=None, ctx=None,
 
 
 def decode_step(params, token, cache, pos, cfg, *, tp=1, policy=None,
-                ctx=None, dtype=jnp.bfloat16, embeds=None, embed_mask=None):
+                ctx=None, dtype=jnp.bfloat16, embeds=None, embed_mask=None,
+                block_tables=None, cache_cfg=None):
     """One decode step. token: [B] int32; pos: scalar int32 (insert position)
     or [B] int32 per-slot positions (continuous-batching engine; a negative
     position marks an idle slot whose cache write is suppressed).
+
+    With a paged ``cache_cfg``, ``block_tables`` [B, max_pages] int32 maps
+    each slot's logical pages to physical pool pages (same row for every
+    layer); the cache pytree holds page pools instead of slot tensors.
 
     ``embeds`` [B, D] + ``embed_mask`` [B] bool optionally override the token
     embedding per slot — the engine uses this to stream modality prefix
@@ -381,7 +421,9 @@ def decode_step(params, token, cache, pos, cfg, *, tp=1, policy=None,
         new_caches = {}
         for i in range(Pn):
             x, nc = block_decode(gp[f"sub{i}"], x, gcache[f"sub{i}"], pos,
-                                 pat[i], cfg, dims, policy=policy, ctx=ctx)
+                                 pat[i], cfg, dims, policy=policy, ctx=ctx,
+                                 block_tables=block_tables,
+                                 cache_cfg=cache_cfg)
             new_caches[f"sub{i}"] = nc
         return x, new_caches
 
@@ -393,7 +435,9 @@ def decode_step(params, token, cache, pos, cfg, *, tp=1, policy=None,
         for i in range(R):
             x, nc = block_decode(params["tail"][f"sub{i}"], x,
                                  cache["tail"][f"sub{i}"], pos, pat[i], cfg,
-                                 dims, policy=policy, ctx=ctx)
+                                 dims, policy=policy, ctx=ctx,
+                                 block_tables=block_tables,
+                                 cache_cfg=cache_cfg)
             tails[f"sub{i}"] = nc
         new_cache["tail"] = tails
     logits = _head(params, x, cfg, dims, policy)

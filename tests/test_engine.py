@@ -47,6 +47,8 @@ def test_continuous_matches_one_shot(mixed_requests):
         tick += 1
 
     assert all(r.done for r in reqs)
+    # the Request contract is [P] int32 end to end (engine, scheduler, steps)
+    assert all(r.prompt.dtype == np.int32 for r in reqs)
     for j, r in enumerate(reqs):
         expect = one_shot(prompts[j], maxtok[j])
         np.testing.assert_array_equal(

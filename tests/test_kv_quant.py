@@ -1,11 +1,21 @@
-"""AMS-KV (beyond-paper): quantized KV cache numerics + attention fidelity."""
+"""AMS-KV (beyond-paper): quantized KV cache numerics + attention fidelity.
 
+Edge-case coverage (jit, non-multiple-of-k head dims, degenerate token
+axes) pins exactly the shapes the paged KV-cache kernel feeds through
+`quantize_kv` at insert time (see repro.cache.pool)."""
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import get_scheme
-from repro.core.kv_quant import dequantize_kv, kv_bytes, quantize_kv
+from repro.core.kv_quant import (
+    dequantize_kv,
+    kv_bytes,
+    packed_head_dim,
+    quantize_kv,
+)
 from repro.models.attention import flash_decode, kv_index_map
 
 
@@ -32,6 +42,61 @@ def test_compression_ratio():
     packed, bf16 = kv_bytes(128)
     assert packed == 64 + 4 + 4  # nibbles + 1 lsb word + scale
     assert bf16 / packed > 3.5
+
+
+def test_roundtrip_under_jit():
+    """quantize/dequantize round-trips inside jax.jit with identical planes
+    and values — the paged engine runs it inside the jitted decode step."""
+    x = rand_kv((3, 5, 2, 64), seed=11)
+
+    @jax.jit
+    def roundtrip(x):
+        q = quantize_kv(x)
+        return q, dequantize_kv(q, x.shape[-1], dtype=jnp.float32)
+
+    q_j, y_j = roundtrip(x)
+    q_e = quantize_kv(x)
+    y_e = dequantize_kv(q_e, 64, dtype=jnp.float32)
+    # codes must agree bit-for-bit; the f32 scale may differ in the last ulp
+    # (XLA fuses the amax/max_normal divide differently under jit)
+    for pl in ("hi", "lsb"):
+        np.testing.assert_array_equal(np.asarray(q_j[pl]), np.asarray(q_e[pl]))
+    np.testing.assert_allclose(np.asarray(q_j["scale"]),
+                               np.asarray(q_e["scale"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y_j), np.asarray(y_e), atol=1e-6)
+
+
+@pytest.mark.parametrize("hd", [90, 33, 6])
+def test_head_dim_not_multiple_of_k(hd):
+    """hd % k != 0 (and odd hd): planes pad to packed_head_dim, dequantize
+    slices the pad off, and the error bound still holds."""
+    k = get_scheme("fp4.25-e2m2").k
+    hd_p = packed_head_dim(hd)
+    assert hd_p % k == 0 and hd_p % 2 == 0 and hd_p >= hd
+    x = rand_kv((4, 3, 2, hd), seed=hd)
+    q = quantize_kv(x)
+    assert q["hi"].shape[-1] == hd_p // 2
+    y = dequantize_kv(q, hd, dtype=jnp.float32)
+    assert y.shape == x.shape
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    rel = np.asarray(jnp.abs(y - x) / jnp.maximum(amax, 1e-9))
+    assert rel.max() <= 2 / 7.5 + 1e-6, rel.max()
+
+
+@pytest.mark.parametrize("n_tok", [0, 1])
+def test_degenerate_token_axes(n_tok):
+    """Zero-length and singleton token axes round-trip with the right
+    shapes (a paged engine tick can quantize a batch with no active slots)."""
+    x = rand_kv((2, n_tok, 2, 32), seed=21)
+    q = quantize_kv(x)
+    assert q["hi"].shape == (2, n_tok, 2, 16)
+    assert q["scale"].shape == (2, n_tok, 2, 1)
+    y = dequantize_kv(q, 32, dtype=jnp.float32)
+    assert y.shape == x.shape
+    if n_tok:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        rel = np.asarray(jnp.abs(y - x) / jnp.maximum(amax, 1e-9))
+        assert rel.max() <= 2 / 7.5 + 1e-6
 
 
 def test_adaptive_beats_forced_on_kv():
