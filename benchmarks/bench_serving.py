@@ -6,9 +6,13 @@ not when the server is ready) and reports, per scheme x cache mode:
 
   * tokens/sec           — aggregate decode throughput over the run
   * p50 / p99 per-token  — wall-clock per engine tick that produced tokens
-    latency                (every in-flight request advances one token/tick,
-                            so tick latency IS per-token latency)
-  * mean request latency — submit -> finish, in ticks (queueing included)
+    latency                (decoding requests advance one token per tick)
+  * TTFT p50 / p99       — submit -> FIRST generated token, in ticks; the
+                            headline number ragged chunked prefill
+                            (``--chunk C``) moves: ceil(prompt/C) prefill
+                            ticks instead of one tick per prompt position
+  * request latency      — submit -> finish p50/p99 + mean, in ticks
+                            (queueing included)
   * utilization          — mean fraction of KV slots busy
 
 On CPU the quantized path pays dequantization compute, so the fp16-relative
@@ -74,6 +78,7 @@ def run_scheme(scheme: str, work, args):
                       impl=args.impl, slots=args.slots,
                       capacity=args.capacity, seed=args.seed,
                       cache_config=cache_config_for(scheme, args),
+                      prefill_chunk=args.chunk,
                       verbose=not args.quiet)
     # warm the jit before the clock matters: one throwaway request, then
     # drop its ticks from the metrics (compile would otherwise land in p99)
@@ -92,12 +97,17 @@ def run_scheme(scheme: str, work, args):
         util.append(eng.active_count / args.slots)
 
     s = eng.stats()
-    lat_ticks = [r.finish_tick - r.submit_tick for r in reqs]
+    # eng.finished after the warmup reset == reqs, so stats() IS the
+    # per-request latency source (no second hand-rolled computation)
     return {
         "tokens_per_s": s["tokens_per_s"],
         "p50_ms": s["decode_ms_median"],
         "p99_ms": s["decode_ms_p99"],
-        "req_latency_ticks": float(np.mean(lat_ticks)),
+        "req_latency_ticks": s["latency_ticks_mean"],
+        "ttft_ticks_p50": s["ttft_ticks_p50"],
+        "ttft_ticks_p99": s["ttft_ticks_p99"],
+        "latency_ticks_p50": s["latency_ticks_p50"],
+        "latency_ticks_p99": s["latency_ticks_p99"],
         "utilization": float(np.mean(util)),
         "ticks": s["ticks"],
         "tokens": s["tokens_generated"],
@@ -124,6 +134,10 @@ def main(argv=None, out_lines=None):
                     help="fixed [slots, capacity] bf16 KV cache (default)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (paged modes)")
+    ap.add_argument("--chunk", type=int, default=1,
+                    help="ragged prefill chunk size C: prefilling slots "
+                         "consume up to C prompt tokens per tick (1 = the "
+                         "one-token-per-tick step)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=0.3,
                     help="mean arrivals per engine tick (Poisson)")
@@ -145,6 +159,8 @@ def main(argv=None, out_lines=None):
                             args.tokens, cfg.vocab_size, args.seed)
 
     mode = args.cache_mode
+    if args.chunk > 1:
+        mode = f"{mode}/chunk{args.chunk}"
     results = {}
     for scheme in args.schemes.split(","):
         scheme = scheme.strip()
@@ -154,6 +170,10 @@ def main(argv=None, out_lines=None):
                 f"tokens_per_s={r['tokens_per_s']:.2f} "
                 f"p50_ms={r['p50_ms']:.2f} p99_ms={r['p99_ms']:.2f} "
                 f"req_latency_ticks={r['req_latency_ticks']:.1f} "
+                f"ttft_ticks_p50={r['ttft_ticks_p50']:.1f} "
+                f"ttft_ticks_p99={r['ttft_ticks_p99']:.1f} "
+                f"latency_ticks_p50={r['latency_ticks_p50']:.1f} "
+                f"latency_ticks_p99={r['latency_ticks_p99']:.1f} "
                 f"util={r['utilization']:.2f} "
                 f"kv_bytes_per_token={r['kv_bytes_per_token']} "
                 f"kv_compression={r['kv_compression']:.2f}")
@@ -174,12 +194,14 @@ def main(argv=None, out_lines=None):
 
 def run(out_lines, quick: bool = False):
     """benchmarks/run.py entry: fp16 vs AMS under the SAME Poisson workload,
-    contiguous AND paged cache modes, all in one CSV."""
+    contiguous AND paged cache modes, plus a ragged chunked-prefill run
+    (chunk=4 — the TTFT columns are what that row moves), all in one CSV."""
     argv = ["--quiet", "--requests", "3" if quick else "6",
             "--tokens", "4", "--slots", "2", "--capacity", "32",
             "--rate", "0.5", "--prompt-mean", "6", "--page-size", "8"]
-    for mode in ("--contiguous", "--paged"):
-        main(argv + [mode], out_lines=out_lines)
+    for extra in (["--contiguous"], ["--paged"],
+                  ["--paged", "--chunk", "4"]):
+        main(argv + extra, out_lines=out_lines)
 
 
 if __name__ == "__main__":

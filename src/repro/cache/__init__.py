@@ -38,14 +38,16 @@ from .ref import paged_attention_ref  # noqa: F401
 def paged_attend(q: jnp.ndarray, pool, lengths: jnp.ndarray,
                  block_table: jnp.ndarray, ccfg: CacheConfig, *,
                  kv_map: np.ndarray, scale: Optional[float] = None) -> jnp.ndarray:
-    """impl-dispatching paged flash-decode: q [B, H, hd] -> [B, H, hd]."""
+    """impl-dispatching paged flash-decode: q [B, H, hd] -> [B, H, hd], or a
+    ragged chunk q [B, c, H, hd] with per-query ``lengths`` [B, c] ->
+    [B, c, H, hd] (multi-query-per-request, the chunked-prefill step)."""
     if ccfg.impl == "ref":
         return paged_attention_ref(q, pool, lengths, block_table, ccfg,
                                    kv_map=kv_map, scale=scale)
     from .paged_attention import paged_attention_pallas
     # the kernel assumes the group-major head layout; every model-zoo config
     # emits exactly that (kv_index_map), asserted here against kv_map
-    H = q.shape[1]
+    H = q.shape[-2]
     kv_n = int(np.max(kv_map)) + 1 if len(kv_map) else 1
     if H % kv_n != 0 or not np.array_equal(kv_map, np.arange(H) // (H // kv_n)):
         raise NotImplementedError(

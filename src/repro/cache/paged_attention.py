@@ -1,6 +1,9 @@
 """Pallas TPU paged-attention decode kernel over AMS-packed (or bf16) pages.
 
-One grid step attends one (slot, kv-head, page) cell:
+One grid step attends one (slot, kv-head, page) cell; a ragged chunked-
+prefill block ([B, c, H, hd] queries with per-query lengths) folds its c
+queries into the row dimension of the same cell, so multi-token prefill
+and single-token decode run the identical grid:
 
   * the block table rides SCALAR PREFETCH (`pltpu.PrefetchScalarGridSpec`),
     so each page's BlockSpec index_map dereferences
@@ -62,13 +65,24 @@ def _restore_page(hi, lsb, scale, fmt, k: int, page: int, hd_p: int,
     return vals[:, :hd]
 
 
+def _row_lengths(len_ref, b, c: int, g: int):
+    """Per-ROW valid-key counts [c*g, 1] for a chunked query block: the
+    flattened lengths ride scalar prefetch as [B*c]; row r of the (c, g)-
+    folded query block belongs to query r // g. c and g are static, so the
+    gather is c scalar SMEM reads."""
+    lv = jnp.stack([len_ref[b * c + j] for j in range(c)])      # [c]
+    return jnp.repeat(lv, g, total_repeat_length=c * g)[:, None]
+
+
 def _online_softmax_step(qf, k_page, v_page, length, i, nb, o_ref,
                          acc_ref, m_ref, l_ref, *, page: int, hd: int,
                          pv_dtype=jnp.float32):
-    """One page of flash-decode accumulation. qf [g, hd] f32 (pre-scaled),
-    k_page/v_page [page, hd] f32. ``pv_dtype`` mirrors flash_decode's
-    ``p.astype(v.dtype)`` before the PV product (bf16 pools cast, AMS
-    lattice values stay f32) so the oracle and the kernel round alike."""
+    """One page of flash-decode accumulation. qf [rows, hd] f32 (pre-scaled;
+    rows = chunk*group for ragged blocks), k_page/v_page [page, hd] f32,
+    ``length`` a scalar or per-row [rows, 1] valid-key count. ``pv_dtype``
+    mirrors flash_decode's ``p.astype(v.dtype)`` before the PV product
+    (bf16 pools cast, AMS lattice values stay f32) so the oracle and the
+    kernel round alike."""
     @pl.when(i == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_CLAMP)
@@ -102,34 +116,36 @@ def _online_softmax_step(qf, k_page, v_page, length, i, nb, o_ref,
 
 def _kernel_bf16(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                  acc_ref, m_ref, l_ref, *, page: int, hd: int, nb: int,
-                 pv_dtype):
+                 chunk: int, g: int, pv_dtype):
     b, i = pl.program_id(0), pl.program_id(2)
     qf = q_ref[0, 0].astype(jnp.float32)
     k_page = k_ref[0, :, 0, :].astype(jnp.float32)
     v_page = v_ref[0, :, 0, :].astype(jnp.float32)
-    _online_softmax_step(qf, k_page, v_page, len_ref[b], i, nb, o_ref,
-                         acc_ref, m_ref, l_ref, page=page, hd=hd,
-                         pv_dtype=pv_dtype)
+    _online_softmax_step(qf, k_page, v_page, _row_lengths(len_ref, b, chunk, g),
+                         i, nb, o_ref, acc_ref, m_ref, l_ref, page=page,
+                         hd=hd, pv_dtype=pv_dtype)
 
 
 def _kernel_ams(bt_ref, len_ref, q_ref, khi_ref, klsb_ref, kscale_ref,
                 vhi_ref, vlsb_ref, vscale_ref, o_ref, acc_ref, m_ref, l_ref,
-                *, fmt, k_share: int, page: int, hd_p: int, hd: int, nb: int):
+                *, fmt, k_share: int, page: int, hd_p: int, hd: int, nb: int,
+                chunk: int, g: int):
     b, i = pl.program_id(0), pl.program_id(2)
     qf = q_ref[0, 0].astype(jnp.float32)
     k_page = _restore_page(khi_ref[0, :, 0, :], klsb_ref[0, :, 0, :],
                            kscale_ref[0, :, 0, :], fmt, k_share, page, hd_p, hd)
     v_page = _restore_page(vhi_ref[0, :, 0, :], vlsb_ref[0, :, 0, :],
                            vscale_ref[0, :, 0, :], fmt, k_share, page, hd_p, hd)
-    _online_softmax_step(qf, k_page, v_page, len_ref[b], i, nb, o_ref,
-                         acc_ref, m_ref, l_ref, page=page, hd=hd)
+    _online_softmax_step(qf, k_page, v_page, _row_lengths(len_ref, b, chunk, g),
+                         i, nb, o_ref, acc_ref, m_ref, l_ref, page=page, hd=hd)
 
 
 # ------------------------------------------------------------ pallas_call
 def paged_attention_pallas(
-    q: jnp.ndarray,              # [B, H, hd] UNSCALED queries
+    q: jnp.ndarray,              # [B, H, hd] or [B, c, H, hd] UNSCALED
     pool,                        # layer pool (cache.pool layout)
-    lengths: jnp.ndarray,        # [B] int32 valid keys (<=0: idle slot)
+    lengths: jnp.ndarray,        # [B] int32 valid keys (<=0: idle slot);
+                                 #   [B, c] per-query for chunked q
     block_table: jnp.ndarray,    # [B, max_pages_per_seq] int32
     ccfg: CacheConfig,
     *,
@@ -137,38 +153,48 @@ def paged_attention_pallas(
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Paged flash-decode. Requires the group-major GQA head layout (the
-    only layout the model zoo emits — see `kv_index_map`). Returns
-    [B, H, hd] in q.dtype."""
-    B, H, hd = q.shape
+    only layout the model zoo emits — see `kv_index_map`). Returns q's
+    shape in q.dtype. A chunked query block folds its c queries into the
+    row dimension of one grid cell ([c*g, hd] per kv head) so the ragged
+    multi-token step still runs ONE kernel; per-query lengths ride the
+    same scalar-prefetch stream as the block table."""
+    chunked = q.ndim == 4
+    if not chunked:
+        q = q[:, None]
+        lengths = jnp.asarray(lengths, jnp.int32)[:, None]
+    B, c, H, hd = q.shape
     kv = jax.tree.leaves(pool["k"])[0].shape[2]
     if H % kv != 0:
         raise ValueError(f"H={H} not grouped over kv={kv}")
     g = H // kv
+    rows = c * g
     page = ccfg.page_size
     nb = block_table.shape[1]
     scale = scale if scale is not None else 1.0 / np.sqrt(hd)
 
     # scale in q.dtype first — the exact rounding flash_decode applies
     qf = (q * np.float32(scale).astype(q.dtype)).astype(jnp.float32)
-    qf = qf.reshape(B, kv, g, hd)
+    # [B, c, kv, g, hd] -> [B, kv, c, g, hd]: chunk-major rows per kv head
+    qf = qf.reshape(B, c, kv, g, hd).transpose(0, 2, 1, 3, 4)
+    qf = qf.reshape(B, kv, rows, hd)
     bt_flat = block_table.reshape(-1).astype(jnp.int32)
-    lengths = jnp.asarray(lengths, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(-1)     # [B*c]
 
     # index maps: scalar-prefetch refs arrive after the grid indices
-    q_spec = pl.BlockSpec((1, 1, g, hd), lambda b, h, i, bt, ln: (b, h, 0, 0))
-    out_spec = pl.BlockSpec((1, 1, g, hd), lambda b, h, i, bt, ln: (b, h, 0, 0))
+    q_spec = pl.BlockSpec((1, 1, rows, hd), lambda b, h, i, bt, ln: (b, h, 0, 0))
+    out_spec = pl.BlockSpec((1, 1, rows, hd), lambda b, h, i, bt, ln: (b, h, 0, 0))
 
     def page_spec(block_tail):
         return pl.BlockSpec(
             (1, page) + block_tail,
             lambda b, h, i, bt, ln: (bt[b * nb + i], 0, h) + (0,) * (len(block_tail) - 1))
 
-    scratch = [pltpu.VMEM((g, hd), jnp.float32),     # acc
-               pltpu.VMEM((g, 128), jnp.float32),    # m (col 0 live)
-               pltpu.VMEM((g, 128), jnp.float32)]    # l (col 0 live)
+    scratch = [pltpu.VMEM((rows, hd), jnp.float32),     # acc
+               pltpu.VMEM((rows, 128), jnp.float32),    # m (col 0 live)
+               pltpu.VMEM((rows, 128), jnp.float32)]    # l (col 0 live)
     grid = (B, kv, nb)
     params_kw = dict(
-        out_shape=jax.ShapeDtypeStruct((B, kv, g, hd), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, kv, rows, hd), jnp.float32),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
@@ -180,7 +206,7 @@ def paged_attention_pallas(
         gw = pool["k"]["lsb"].shape[-1]
         kernel = functools.partial(
             _kernel_ams, fmt=scheme.base, k_share=scheme.k, page=page,
-            hd_p=hd_p, hd=hd, nb=nb)
+            hd_p=hd_p, hd=hd, nb=nb, chunk=c, g=g)
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2, grid=grid,
             in_specs=[q_spec,
@@ -195,7 +221,7 @@ def paged_attention_pallas(
             pool["v"]["hi"], pool["v"]["lsb"], pool["v"]["scale"])
     else:
         kernel = functools.partial(_kernel_bf16, page=page, hd=hd, nb=nb,
-                                   pv_dtype=pool["v"].dtype)
+                                   chunk=c, g=g, pv_dtype=pool["v"].dtype)
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2, grid=grid,
             in_specs=[q_spec, page_spec((1, hd)), page_spec((1, hd))],
@@ -203,4 +229,7 @@ def paged_attention_pallas(
         o = pl.pallas_call(kernel, grid_spec=grid_spec, **params_kw)(
             bt_flat, lengths, qf, pool["k"], pool["v"])
 
-    return o.reshape(B, H, hd).astype(q.dtype)
+    # [B, kv, c, g, hd] -> [B, c, H, hd] (undo the chunk-major row fold)
+    o = o.reshape(B, kv, c, g, hd).transpose(0, 2, 1, 3, 4)
+    o = o.reshape(B, c, H, hd).astype(q.dtype)
+    return o if chunked else o[:, 0]

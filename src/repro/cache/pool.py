@@ -14,10 +14,13 @@ i.e. the AMS layout is exactly `repro.core.kv_quant`'s packed planes with a
 same block-table row addresses every layer's pool (each layer has its own
 pool of the same geometry, vLLM-style).
 
-Inserts are one scatter per plane per layer: a suppressed write (idle slot,
-pos < 0) is routed to an out-of-range page index and dropped by the scatter
-— no full-pool select ever materializes. Each token is quantized ONCE at
-insert; history is never repacked.
+Inserts are one scatter per plane per layer and take a [B, c] token BLOCK
+(c = 1 is the single-token decode case; the ragged engine step packs up to
+C prefill tokens per slot per tick): suppressed writes (idle slot pos < 0,
+or chunk entries past a slot's valid count) are routed to an out-of-range
+page index and dropped by the scatter — no full-pool select ever
+materializes. Each token is quantized ONCE at insert; history is never
+repacked.
 
 This module is model-free (no `repro.models` import) so the model layer can
 build on it without an import cycle.
@@ -62,28 +65,40 @@ def make_gqa_page_pool(ccfg: CacheConfig, kv: int, hd: int,
 
 
 # ------------------------------------------------------------------ insert
-def _page_offset(pos, block_table, ccfg: CacheConfig, num_pages: int):
-    """Physical (page, offset) per slot; suppressed writes -> page index P
-    (out of range, dropped by the scatter's mode='drop')."""
-    B = pos.shape[0]
-    logical = jnp.clip(pos // ccfg.page_size, 0, block_table.shape[1] - 1)
-    page = block_table[jnp.arange(B), logical]
-    page = jnp.where(pos >= 0, page, num_pages)
-    off = jnp.clip(pos % ccfg.page_size, 0, ccfg.page_size - 1)
+def _page_offset(pos, nvalid, block_table, ccfg: CacheConfig,
+                 num_pages: int, c: int):
+    """Physical (page, offset) [B, c] for a chunk starting at ``pos`` per
+    slot; suppressed writes (idle slot, or chunk index >= nvalid) -> page
+    index P (out of range, dropped by the scatter's mode='drop')."""
+    j = jnp.arange(c, dtype=jnp.int32)[None, :]
+    p = pos[:, None] + j                                      # [B, c]
+    ok = (pos[:, None] >= 0) & (j < nvalid[:, None])
+    logical = jnp.clip(p // ccfg.page_size, 0, block_table.shape[1] - 1)
+    page = jnp.take_along_axis(block_table, logical, axis=1)  # [B, c]
+    page = jnp.where(ok, page, num_pages)
+    off = jnp.clip(p % ccfg.page_size, 0, ccfg.page_size - 1)
     return page, off
 
 
 def paged_insert(pool: Dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
                  pos: jnp.ndarray, block_table: jnp.ndarray,
-                 ccfg: CacheConfig) -> Dict:
-    """Write this tick's K/V vectors ([B, 1, kv, hd]) into the layer pool.
+                 ccfg: CacheConfig, nvalid=None) -> Dict:
+    """Write this tick's K/V block ([B, c, kv, hd], c >= 1) into the layer
+    pool — one scatter per plane packs all c tokens per slot.
 
-    ``pos`` is [B] int32 per-slot insert positions (negative = idle slot,
-    write dropped); ``block_table`` is [B, max_pages_per_seq] int32.
+    ``pos`` is [B] int32 per-slot START positions (negative = idle slot,
+    write dropped); ``nvalid`` [B] int32 bounds each slot's valid chunk
+    entries (default: every entry of non-idle slots — the single-token
+    contract when c == 1); ``block_table`` is [B, max_pages_per_seq] int32.
+    AMS pools quantize each written vector ONCE here, history untouched.
     """
+    c = k_new.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    if nvalid is None:
+        nvalid = jnp.where(pos >= 0, c, 0)
     num_pages = jax.tree.leaves(pool["k"])[0].shape[0]
-    page, off = _page_offset(jnp.asarray(pos, jnp.int32), block_table,
-                             ccfg, num_pages)
+    page, off = _page_offset(pos, jnp.asarray(nvalid, jnp.int32),
+                             block_table, ccfg, num_pages, c)
 
     def write(leaf, val):
         return leaf.at[page, off].set(val.astype(leaf.dtype), mode="drop")
@@ -92,12 +107,12 @@ def paged_insert(pool: Dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
         scheme = get_scheme(ccfg.kv_scheme)
         out = {}
         for name, new in (("k", k_new), ("v", v_new)):
-            q = quantize_kv(new[:, 0], scheme, ccfg.kv_strategy)  # [B, kv, *]
+            q = quantize_kv(new, scheme, ccfg.kv_strategy)  # [B, c, kv, *]
             out[name] = {pl: write(pool[name][pl], q[pl])
                          for pl in ("hi", "lsb", "scale")}
         return out
-    return {"k": write(pool["k"], k_new[:, 0]),
-            "v": write(pool["v"], v_new[:, 0])}
+    return {"k": write(pool["k"], k_new),
+            "v": write(pool["v"], v_new)}
 
 
 # ------------------------------------------------------------------ gather

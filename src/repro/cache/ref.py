@@ -30,9 +30,11 @@ from .pool import gather_kv
 
 
 def paged_attention_ref(
-    q: jnp.ndarray,              # [B, H, hd] (UNSCALED query)
+    q: jnp.ndarray,              # [B, H, hd] or [B, c, H, hd] (UNSCALED)
     pool,                        # layer pool (see cache.pool)
-    lengths: jnp.ndarray,        # [B] int32 valid keys per slot (<=0: idle)
+    lengths: jnp.ndarray,        # [B] int32 valid keys per slot (<=0: idle);
+                                 #   [B, c] per-QUERY lengths when q is a
+                                 #   ragged chunk (multi-query-per-request)
     block_table: jnp.ndarray,    # [B, max_pages_per_seq] int32
     ccfg: CacheConfig,
     *,
@@ -40,9 +42,12 @@ def paged_attention_ref(
     scale: Optional[float] = None,
 ) -> jnp.ndarray:
     # function-level import: models.attention layers on top of repro.cache
-    from repro.models.attention import flash_decode
+    from repro.models.attention import flash_decode, flash_decode_chunk
 
     hd = q.shape[-1]
     dtype = jnp.float32 if ccfg.quantized else q.dtype
     k, v = gather_kv(pool, block_table, hd, ccfg, dtype=dtype)
+    if q.ndim == 4:   # chunked: intra-chunk causality rides in lengths
+        return flash_decode_chunk(q, k, v, lengths, kv_map=kv_map,
+                                  scale=scale)
     return flash_decode(q, k, v, lengths, kv_map=kv_map, scale=scale)

@@ -18,7 +18,6 @@ Grid: (B_blocks, N_blocks, K_blocks), K innermost ("arbitrary") so each
 from __future__ import annotations
 
 import functools
-import math
 from typing import Optional
 
 import jax
@@ -132,12 +131,6 @@ def _kernel_fp533(x_ref, hi_ref, scale_ref, o_ref, acc_ref, *,
 # --------------------------------------------------------------------------
 # pallas_call wrapper
 # --------------------------------------------------------------------------
-def default_bk(lay: PackLayout, target: int = 512) -> int:
-    """Smallest multiple of both the packing block and 128 near `target`."""
-    base = math.lcm(lay.k_block, 128)
-    return base * max(1, target // base)
-
-
 @functools.partial(
     jax.jit,
     static_argnames=("lay", "B", "K", "N", "bb", "bk", "bn", "out_dtype", "interpret"),

@@ -2,6 +2,10 @@
 
 Handles shape normalization (leading batch dims, ragged B/K/N padding) so the
 kernel only ever sees fully-tiled operands, then slices the result back.
+
+Block shapes default to `kernels.tuning.plan_tiles` — the largest MXU-
+aligned tile whose double-buffered working set fits the VMEM budget for the
+actual (B, K, N) — with explicit ``block_*`` overrides taking precedence.
 """
 
 from __future__ import annotations
@@ -12,18 +16,25 @@ import jax.numpy as jnp
 
 from repro.core.packing import PackedWeight
 from . import ams_matmul as _k
+from .tuning import plan_tiles
 
 
 def _ceil_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def default_tiles(pw: PackedWeight, B: int):
+    """The VMEM-budgeted `TilePlan` ams_matmul uses when no explicit block
+    shapes are given (exposed for tests and tuning inspection)."""
+    return plan_tiles(pw.layout, B, pw.K, pw.N)
+
+
 def ams_matmul(
     x: jnp.ndarray,
     pw: PackedWeight,
     *,
-    block_b: int = 8,
-    block_n: int = 256,
+    block_b: int | None = None,
+    block_n: int | None = None,
     block_k: int | None = None,
     out_dtype=jnp.float32,
     interpret: bool = False,
@@ -36,7 +47,12 @@ def ams_matmul(
     B = math.prod(lead) if lead else 1
     x2 = x.reshape(B, x.shape[-1])
 
-    bk = block_k or _k.default_bk(lay)
+    if block_b is None or block_n is None or block_k is None:
+        plan = plan_tiles(lay, B, K, N)
+        block_b = plan.bb if block_b is None else block_b
+        block_n = plan.bn if block_n is None else block_n
+        block_k = plan.bk if block_k is None else block_k
+    bk = block_k
     bb = min(block_b, _ceil_to(B, 8))
     bn = min(block_n, _ceil_to(N, 128))
 

@@ -21,11 +21,20 @@ Architecture (Orca-style iteration-level scheduling):
     gated on the free-PAGE budget at admit time (paged — short requests
     reserve only their own pages, not worst-case slots), so nothing is
     ever preempted mid-flight;
-  * prefill is CHUNKED INTO THE DECODE BATCH: an admitted request's prompt
-    (and any modality prefix embeddings) is fed one position per tick
-    through the same decode step that serves decoding slots, its logits
-    discarded until the last prompt token. One program, no separate
-    prefill compilation, no batch-shape churn;
+  * prefill is CHUNKED INTO THE DECODE BATCH as a RAGGED MULTI-TOKEN STEP:
+    each tick, every active slot contributes a variable-length block of up
+    to ``prefill_chunk`` tokens — prefilling slots consume a prompt chunk
+    (and any modality prefix embeddings), decoding slots consume 1 — all
+    executed as ONE jitted program (`launch.steps.build_engine_step` with
+    ``chunk=C``). Logits are taken in-step at each slot's last valid
+    token, so time-to-first-token scales with ceil(prompt/C) ticks instead
+    of prompt length. A global per-tick TOKEN BUDGET caps the chunk total;
+    every active slot is guaranteed one token per tick and admission is
+    budget-aware (`FIFOScheduler.admit(max_admit=...)`), so a long prefill
+    can never starve decode slots. One program, no separate prefill
+    compilation, no batch-shape churn. (``prefill_chunk=1`` — the default,
+    and the only mode for recurrent-state families — degenerates to the
+    original one-position-per-tick step.);
   * sampling is greedy argmax on-device; only [B] int32s cross to the host
     per tick, and the host decides each slot's next input.
 
@@ -74,6 +83,7 @@ class ServeEngine:
                  impl: str = "ref", mesh_kind: str = "none",
                  slots: int = 4, capacity: int = 128, max_queue: Optional[int] = None,
                  cache_config: Optional[CacheConfig] = None,
+                 prefill_chunk: int = 1, token_budget: Optional[int] = None,
                  seed: int = 0, params=None, verbose: bool = False):
         cfg = get_config(arch)
         if reduced:
@@ -82,6 +92,16 @@ class ServeEngine:
         self.scheme = scheme
         self.slots = slots
         self.capacity = capacity
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.chunk = prefill_chunk   # chunk support is gated by
+        #                              build_engine_step(check_chunked_support)
+        # per-tick token budget: every active slot is guaranteed 1; prefill
+        # chunks grow only into the leftover. Default = no throttling.
+        self.token_budget = (token_budget if token_budget is not None
+                             else slots * self.chunk)
+        if self.token_budget < 1:
+            raise ValueError("token_budget must be >= 1")
         ccfg = cache_config or CacheConfig()
         if ccfg.paged:
             ccfg = ccfg.sized(capacity=capacity, slots=slots)
@@ -112,7 +132,7 @@ class ServeEngine:
                                     cache_cfg=ccfg if ccfg.paged else None)
             self._step, _, _ = build_engine_step(
                 self.mesh, cfg, self.rcfg,
-                cache_cfg=ccfg if ccfg.paged else None)
+                cache_cfg=ccfg if ccfg.paged else None, chunk=self.chunk)
             # paged pools need no per-slot reset: positions are written
             # front-to-front per request, so every valid key is fresh, and
             # recurrent-state families are rejected by check_paged_support
@@ -171,20 +191,25 @@ class ServeEngine:
 
     # ----------------------------------------------------------------- tick
     def step(self) -> Dict[str, object]:
-        """One engine tick: admit, run the slot-masked step, advance slots.
+        """One engine tick: admit, run the slot-masked ragged step, advance
+        slots by their consumed chunk lengths.
 
         Returns {"finished": [Request], "generated": int, "active": int}.
         """
         t0 = time.perf_counter()
         paged = self.cache_cfg.paged
+        C = self.chunk
         with use_mesh(self.mesh):
             # 1) admit queued requests into free slots (contiguous: reset
             #    slot caches first — recurrent SSM/RG-LRU states integrate
             #    garbage while a slot idles; KV entries are position-masked
             #    but cleared too. Paged: reserve the request's worst-case
             #    pages and publish its block-table row instead; admission is
-            #    additionally gated on the free-page budget via `fits`)
+            #    additionally gated on the free-page budget via `fits`).
+            #    Admission is token-budget-aware: active slots never exceed
+            #    the per-tick budget, so every slot advances every tick.
             free = [s for s, r in enumerate(self.active) if r is None]
+            room = self.token_budget - self.active_count
             fits = None
             if paged:
                 # pages are allocated after admit() returns, so the budget
@@ -200,7 +225,8 @@ class ServeEngine:
                         return False
                     promised += need
                     return True
-            for slot, req in self.sched.admit(free, self.tick, fits=fits):
+            for slot, req in self.sched.admit(free, self.tick, fits=fits,
+                                              max_admit=max(0, room)):
                 if paged:
                     req.pages = self.alloc.alloc(
                         req.rid, self.alloc.pages_needed(req.kv_need))
@@ -217,49 +243,81 @@ class ServeEngine:
                 self.tick += 1
                 return {"finished": [], "generated": 0, "active": 0}
 
-            # 2) build this tick's inputs: one position per active slot
-            token = np.zeros(self.slots, np.int32)
+            # 2) size each slot's chunk under the global token budget:
+            #    every active slot gets 1 guaranteed token; prefilling slots
+            #    grow toward C (never past the prompt end) from the leftover
+            nvalid = np.zeros(self.slots, np.int32)
+            leftover = self.token_budget - self.active_count
+            for s, req in enumerate(self.active):
+                if req is None:
+                    continue
+                n = 1
+                rem = req.n_prefix + req.prompt_len - int(self.fed[s])
+                if C > 1 and rem > 1:      # still prefilling past this tick
+                    extra = min(min(C, rem) - 1, leftover)
+                    n += max(0, extra)
+                    leftover -= n - 1
+                nvalid[s] = n
+
+            # 3) build this tick's ragged inputs: [B, C] token block per
+            #    slot, per-slot start position + valid length
+            token = np.zeros((self.slots, C), np.int32)
             pos = np.full(self.slots, -1, np.int32)    # idle: write-suppressed
             use_prefix = self.cfg.num_prefix_embeds > 0
-            embeds = (np.zeros((self.slots, self.cfg.d_model), np.float32)
+            embeds = (np.zeros((self.slots, C, self.cfg.d_model), np.float32)
                       if use_prefix else None)
-            emask = np.zeros(self.slots, bool) if use_prefix else None
+            emask = np.zeros((self.slots, C), bool) if use_prefix else None
             for s, req in enumerate(self.active):
                 if req is None:
                     continue
                 i = int(self.fed[s])
                 pos[s] = i
-                if i < req.n_prefix:
-                    embeds[s] = req.prefix_embeds[i]
-                    emask[s] = True
-                elif i < req.n_prefix + req.prompt_len:
-                    token[s] = req.prompt[i - req.n_prefix]
-                else:
-                    token[s] = self.last_token[s]
+                for j in range(int(nvalid[s])):
+                    idx = i + j
+                    if idx < req.n_prefix:
+                        embeds[s, j] = req.prefix_embeds[idx]
+                        emask[s, j] = True
+                    elif idx < req.n_prefix + req.prompt_len:
+                        token[s, j] = req.prompt[idx - req.n_prefix]
+                    else:
+                        token[s, j] = self.last_token[s]
 
-            # 3) one jitted step for every slot
-            args = (self.params, jnp.asarray(token), jnp.asarray(pos),
-                    self.cache)
+            # 4) ONE jitted step for every slot (ragged when C > 1)
+            if C > 1:
+                args = (self.params, jnp.asarray(token), jnp.asarray(pos),
+                        jnp.asarray(nvalid), self.cache)
+            else:
+                args = (self.params, jnp.asarray(token[:, 0]),
+                        jnp.asarray(pos), self.cache)
             if paged:
                 args += (jnp.asarray(self.block_tables),)
             if use_prefix:
-                args += (jnp.asarray(embeds), jnp.asarray(emask))
+                if C > 1:
+                    args += (jnp.asarray(embeds), jnp.asarray(emask))
+                else:
+                    args += (jnp.asarray(embeds[:, 0]),
+                             jnp.asarray(emask[:, 0]))
             next_tok, self.cache = self._step(*args)
             next_tok = np.asarray(next_tok)
 
-            # 4) advance slot state; collect sampled tokens; free finished
+            # 5) advance slot state by consumed chunk lengths; collect
+            #    sampled tokens; free finished
             finished, generated = [], 0
             for s, req in enumerate(self.active):
                 if req is None:
                     continue
                 i = int(self.fed[s])
-                self.fed[s] = i + 1
-                if i >= req.n_prefix + req.prompt_len - 1:
-                    # this tick consumed the last prompt token or a generated
-                    # token -> its argmax is the next generated token
+                n = int(nvalid[s])
+                self.fed[s] = i + n
+                if i + n - 1 >= req.n_prefix + req.prompt_len - 1:
+                    # this chunk consumed the last prompt token or a generated
+                    # token -> the last valid position's argmax is the next
+                    # generated token
                     req.tokens.append(int(next_tok[s]))
                     self.last_token[s] = int(next_tok[s])
                     generated += 1
+                    if len(req.tokens) == 1:
+                        req.first_token_tick = self.tick
                     if len(req.tokens) >= req.max_tokens:
                         req.finish_tick = self.tick
                         self.finished.append(req)
@@ -311,6 +369,16 @@ class ServeEngine:
         tok = np.asarray(self._tick_tokens) if self._tick_tokens else np.zeros(1)
         total_s = float(tick_s.sum())
         decode_ticks = tick_s[tok > 0]
+        # TTFT (submit -> first token) and end-to-end request latency, in
+        # engine ticks over finished requests — TTFT is the number chunked
+        # prefill moves (ceil(prompt/C) prefill ticks instead of prompt_len)
+        ttft = np.asarray([r.ttft_ticks for r in self.finished
+                           if r.first_token_tick >= 0], np.float64)
+        e2e = np.asarray([r.latency_ticks for r in self.finished], np.float64)
+
+        def pct(a, q):
+            return float(np.percentile(a, q)) if a.size else 0.0
+
         out = {
             "ticks": len(self._tick_s),
             "requests_finished": len(self.finished),
@@ -320,6 +388,12 @@ class ServeEngine:
                                  if decode_ticks.size else 0.0),
             "decode_ms_p99": (1e3 * float(np.percentile(decode_ticks, 99))
                               if decode_ticks.size else 0.0),
+            "ttft_ticks_mean": float(ttft.mean()) if ttft.size else 0.0,
+            "ttft_ticks_p50": pct(ttft, 50),
+            "ttft_ticks_p99": pct(ttft, 99),
+            "latency_ticks_mean": float(e2e.mean()) if e2e.size else 0.0,
+            "latency_ticks_p50": pct(e2e, 50),
+            "latency_ticks_p99": pct(e2e, 99),
             "queue_depth": self.sched.queue_depth,
             "kv_bytes_per_token": self.kv_bytes_per_token(),
             "kv_compression_vs_bf16": self.kv_compression_vs_bf16(),

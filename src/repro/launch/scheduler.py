@@ -37,6 +37,7 @@ class Request:
     # lifecycle, filled by the scheduler/engine (tick = engine step index)
     submit_tick: int = -1
     admit_tick: int = -1
+    first_token_tick: int = -1            # tick that produced tokens[0]
     finish_tick: int = -1
     slot: int = -1
     tokens: List[int] = dataclasses.field(default_factory=list)
@@ -64,6 +65,23 @@ class Request:
     @property
     def done(self) -> bool:
         return self.finish_tick >= 0
+
+    @property
+    def ttft_ticks(self) -> int:
+        """Submit -> first generated token, in engine ticks (-1 if none yet).
+        This is the headline number chunked prefill moves: prompt positions
+        consumed per tick go from 1 to the chunk size."""
+        if self.first_token_tick < 0:
+            return -1
+        return self.first_token_tick - self.submit_tick
+
+    @property
+    def latency_ticks(self) -> int:
+        """Submit -> finish, in engine ticks (queueing included; -1 while
+        in flight)."""
+        if self.finish_tick < 0:
+            return -1
+        return self.finish_tick - self.submit_tick
 
 
 class FIFOScheduler:
@@ -99,6 +117,7 @@ class FIFOScheduler:
 
     def admit(self, free_slots: List[int], tick: int,
               fits: Optional[Callable[[Request], bool]] = None,
+              max_admit: Optional[int] = None,
               ) -> List[Tuple[int, Request]]:
         """Assign queued requests to free slots, FIFO order. Returns
         (slot, request) pairs; the engine resets each slot's cache row
@@ -106,10 +125,19 @@ class FIFOScheduler:
 
         ``fits(req)`` (optional) is an extra admission gate — the paged
         engine passes its free-page budget check. A queue head that does
-        not fit BLOCKS admission (strict FIFO, no overtaking)."""
+        not fit BLOCKS admission (strict FIFO, no overtaking).
+
+        ``max_admit`` (optional) caps admissions this tick — the chunked
+        engine passes its remaining TOKEN budget headroom
+        (token_budget - active slots), so the number of active slots never
+        exceeds the per-tick token budget and every slot (decode slots
+        included) is guaranteed to advance at least one token per tick no
+        matter how many long prefills are chunking."""
         placed = []
         for slot in free_slots:
             if not self._queue:
+                break
+            if max_admit is not None and len(placed) >= max_admit:
                 break
             if fits is not None and not fits(self._queue[0]):
                 break

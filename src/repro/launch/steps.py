@@ -283,25 +283,35 @@ def build_serve_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
 
 
 def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
-                      cache_cfg=None):
+                      cache_cfg=None, chunk: int = 1):
     """Slot-masked decode step for the continuous-batching engine.
 
     One tick serves every slot of the fixed-capacity KV cache at its OWN
     position: ``pos`` is [B] int32 per-slot insert positions (negative =
     idle slot; its cache write is suppressed and its output is garbage the
     engine ignores). Slots still consuming their prompt ride the same step
-    as decoding slots — chunked prefill — and the engine discards their
-    logits until the last prompt token.
+    as decoding slots and the engine discards their logits until the last
+    prompt token.
+
+    RAGGED MULTI-TOKEN STEP (``chunk`` = C > 1): every slot contributes a
+    variable-length block of up to C tokens per tick — prefilling slots a
+    prompt chunk, decoding slots 1, idle slots 0 — still as ONE jitted
+    program. ``token`` becomes [B, C], ``pos`` [B] holds each slot's START
+    position, and an extra [B] int32 ``nvalid`` arg (after pos) carries the
+    per-slot valid length; logits are taken in-step at each slot's last
+    valid token. Pure-attention families only (`check_chunked_support`).
 
     Greedy sampling (argmax) runs on-device so each tick moves only [B]
     int32s back to the host scheduler.
 
-    step(params, token [B], pos [B], cache[, block_tables [B, MP]]
-         [, embeds [B, D], embed_mask [B]]) -> (next_token [B], cache)
+    step(params, token [B] | [B, C], pos [B][, nvalid [B]], cache
+         [, block_tables [B, MP]][, embeds, embed_mask])
+        -> (next_token [B], cache)
 
     The embeds override exists only when the config has a modality frontend
     (``num_prefix_embeds > 0``): prefix embeddings stream through the same
-    step during prefill instead of a separate prefill program.
+    step during prefill instead of a separate prefill program ([B, D] +
+    [B] mask in the one-token step, [B, C, D] + [B, C] in the ragged step).
 
     With a paged ``cache_cfg`` (see `repro.cache.CacheConfig`), the cache
     pytree holds PAGE POOLS and the step takes the per-slot block tables as
@@ -317,13 +327,17 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
     dp = batch_dp(mesh, B)
     policy = rcfg.quant if rcfg.quantized else None
     has_prefix = cfg.num_prefix_embeds > 0
+    chunked = chunk > 1
+    if chunked:
+        from repro.models import check_chunked_support
+        check_chunked_support(cfg)
 
     def core(params, token, pos, cache, block_tables=None, embeds=None,
-             embed_mask=None):
+             embed_mask=None, nvalid=None):
         logits, cache = decode_step(
             params, token, cache, pos, cfg, tp=ctx.tp, policy=policy,
             ctx=ctx, dtype=jnp.bfloat16, embeds=embeds, embed_mask=embed_mask,
-            block_tables=block_tables, cache_cfg=cache_cfg)
+            block_tables=block_tables, cache_cfg=cache_cfg, nvalid=nvalid)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
     pshape = quantized_param_shapes(cfg, rcfg, ctx.tp)
@@ -338,43 +352,50 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
         c_shard = SH.cache_shardings(cache_shape, mesh, dp=dp, seq_shard=True)
     tok_shard = NamedSharding(mesh, P(dp))
 
-    if paged and has_prefix:
-        def engine_fn(params, token, pos, cache, block_tables, embeds,
-                      embed_mask):
-            return core(params, token, pos, cache, block_tables, embeds,
-                        embed_mask)
-        in_shardings = (p_shard, None, None, c_shard, None, None, None)
-    elif paged:
-        def engine_fn(params, token, pos, cache, block_tables):
-            return core(params, token, pos, cache, block_tables)
-        in_shardings = (p_shard, None, None, c_shard, None)
-    elif has_prefix:
-        def engine_fn(params, token, pos, cache, embeds, embed_mask):
-            return core(params, token, pos, cache, None, embeds, embed_mask)
-        in_shardings = (p_shard, None, None, c_shard, None, None)
-    else:
-        def engine_fn(params, token, pos, cache):
-            return core(params, token, pos, cache)
-        in_shardings = (p_shard, None, None, c_shard)
+    # one signature for every (chunked, paged, prefix) combination: the
+    # ordered arg-name list drives the closure, the shardings tuple AND the
+    # donated cache index, so an optional input added here can never be
+    # mis-threaded in one branch only
+    arg_names = (["token", "pos"] + (["nvalid"] if chunked else [])
+                 + ["cache"] + (["block_tables"] if paged else [])
+                 + (["embeds", "embed_mask"] if has_prefix else []))
 
+    def engine_fn(params, *args):
+        kw = dict(zip(arg_names, args))
+        return core(params, kw["token"], kw["pos"], kw["cache"],
+                    kw.get("block_tables"), kw.get("embeds"),
+                    kw.get("embed_mask"), kw.get("nvalid"))
+
+    in_shardings = (p_shard,) + tuple(
+        c_shard if n == "cache" else None for n in arg_names)
     jitted = jax.jit(engine_fn, in_shardings=in_shardings,
                      out_shardings=(tok_shard, c_shard),
-                     donate_argnums=(3,))
+                     donate_argnums=(1 + arg_names.index("cache"),))
+    # arg_shapes preserves the jitted signature's POSITIONAL order — the
+    # dry-run lowers via `jitted.lower(*arg_shapes.values())`
+    tok_shape = (B, chunk) if chunked else (B,)
     arg_shapes = dict(
         params=pshape,
-        token=jax.ShapeDtypeStruct((B,), jnp.int32, sharding=tok_shard),
+        token=jax.ShapeDtypeStruct(tok_shape, jnp.int32, sharding=tok_shard),
         pos=jax.ShapeDtypeStruct((B,), jnp.int32, sharding=tok_shard),
-        cache=cache_shape,
     )
+    if chunked:
+        arg_shapes["nvalid"] = jax.ShapeDtypeStruct((B,), jnp.int32,
+                                                    sharding=tok_shard)
+    arg_shapes["cache"] = cache_shape
     if paged:
         arg_shapes["block_tables"] = jax.ShapeDtypeStruct(
             (B, cache_cfg.max_pages_per_seq), jnp.int32)
     if has_prefix:
-        arg_shapes["embeds"] = jax.ShapeDtypeStruct((B, cfg.d_model),
-                                                    jnp.float32)
-        arg_shapes["embed_mask"] = jax.ShapeDtypeStruct((B,), jnp.bool_)
-    return jitted, arg_shapes, dict(params=p_shard, token=tok_shard,
-                                    pos=tok_shard, cache=c_shard)
+        emb_shape = (B, chunk, cfg.d_model) if chunked else (B, cfg.d_model)
+        msk_shape = (B, chunk) if chunked else (B,)
+        arg_shapes["embeds"] = jax.ShapeDtypeStruct(emb_shape, jnp.float32)
+        arg_shapes["embed_mask"] = jax.ShapeDtypeStruct(msk_shape, jnp.bool_)
+    shardings = dict(params=p_shard, token=tok_shard, pos=tok_shard,
+                     cache=c_shard)
+    if chunked:
+        shardings["nvalid"] = tok_shard
+    return jitted, arg_shapes, shardings
 
 
 def build_step(mesh, cfg: ModelConfig, rcfg: RunConfig):

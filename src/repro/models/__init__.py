@@ -3,6 +3,7 @@
 from .common import model_dims, quantize_params  # noqa: F401
 from .parallel import NO_CTX, ParallelCtx  # noqa: F401
 from .transformer import (  # noqa: F401
+    check_chunked_support,
     check_paged_support,
     decode_step,
     forward_seq,

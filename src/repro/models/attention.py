@@ -209,6 +209,78 @@ def flash_decode(
     return (o / jnp.maximum(l, 1e-20)[..., None]).astype(q.dtype)
 
 
+def flash_decode_chunk(
+    q: jnp.ndarray,            # [B, c, H, hd] query block (c <= chunk size)
+    k_cache: jnp.ndarray,      # [B, S_loc, kv, hd]
+    v_cache: jnp.ndarray,      # [B, S_loc, kv, hd_v]
+    lengths: jnp.ndarray,      # [B, c] int32 valid keys PER QUERY (0 = masked
+                               #   row -> exact-zero output)
+    *,
+    kv_map: np.ndarray,
+    axis_name: Optional[str] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Chunked flash-decode: a [B, c] ragged query block attends the cache.
+
+    Intra-chunk causality is carried entirely by ``lengths``: the caller
+    inserts the chunk's keys FIRST, then sets query j's length to
+    ``start + j + 1`` — so each query sees the prefix plus itself and the
+    chunk entries before it, never the ones after. Rows past a slot's valid
+    count get length 0 and flush to exact zeros (the engine discards them).
+    Same additive-mask online-softmax math as `flash_decode`; no ring /
+    sliding-window support (chunked mode is gated to plain-GQA / MLA
+    families).
+    """
+    B, c, H, hd = q.shape
+    S_loc = k_cache.shape[1]
+    hd_v = v_cache.shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    shard = jax.lax.axis_index(axis_name) if axis_name else 0
+    lengths = jnp.asarray(lengths, jnp.int32)
+    k_pos = shard * S_loc + jnp.arange(S_loc)        # [S_loc] global positions
+
+    kv_n = k_cache.shape[2]
+    grouped = (H % kv_n == 0) and np.array_equal(
+        kv_map, np.arange(H) // (H // kv_n))
+    qf = q * np.float32(scale).astype(q.dtype)
+    if grouped:
+        g = H // kv_n
+        qg = qf.reshape(B, c, kv_n, g, hd)
+        s = jnp.einsum("bcngd,bknd->bcngk", qg, k_cache,
+                       preferred_element_type=jnp.float32)
+        s = s.reshape(B, c, H, S_loc)
+    else:
+        kvm = jnp.asarray(kv_map)
+        ke = k_cache[:, :, kvm, :]
+        s = jnp.einsum("bchd,bkhd->bchk", qf, ke,
+                       preferred_element_type=jnp.float32)
+    valid = k_pos[None, None, :] < lengths[:, :, None]   # [B, c, S_loc]
+    vmask = valid[:, :, None, :]                          # [B, c, 1, S_loc]
+    s = jnp.where(vmask, s, -jnp.inf)
+
+    m = s.max(axis=-1)                                    # [B, c, H]
+    if axis_name:
+        m = jax.lax.pmax(m, axis_name)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(vmask, p, 0.0)
+    l = p.sum(axis=-1)                                    # [B, c, H]
+    if grouped:
+        g = H // kv_n
+        pg = p.reshape(B, c, kv_n, g, S_loc)
+        o = jnp.einsum("bcngk,bknd->bcngd", pg.astype(v_cache.dtype), v_cache,
+                       preferred_element_type=jnp.float32)
+        o = o.reshape(B, c, H, hd_v)
+    else:
+        ve = v_cache[:, :, kvm, :]
+        o = jnp.einsum("bchk,bkhd->bchd", p.astype(ve.dtype), ve,
+                       preferred_element_type=jnp.float32)
+    if axis_name:
+        l = jax.lax.psum(l, axis_name)
+        o = jax.lax.psum(o, axis_name)
+    return (o / jnp.maximum(l, 1e-20)[..., None]).astype(q.dtype)
+
+
 def cache_insert(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray,
                  axis_name: Optional[str] = None, ring_window: int = 0) -> jnp.ndarray:
     """Insert `new` [B, 1, kv, hd] at global position `pos` into a (possibly
@@ -237,6 +309,32 @@ def cache_insert(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray,
     if pos.ndim == 1:  # per-slot: vmap over the batch dim
         return jax.vmap(lambda c, n, p: insert_one(c, n, p, 0))(cache, new, pos)
     return insert_one(cache, new, pos, 1)
+
+
+def cache_insert_chunk(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray,
+                       nvalid: jnp.ndarray,
+                       axis_name: Optional[str] = None) -> jnp.ndarray:
+    """Insert a ragged chunk `new` [B, c, kv, hd] at per-slot start positions
+    ``pos`` [B] into a (possibly sequence-sharded) cache [B, S_loc, kv, hd].
+
+    Slot b writes positions ``pos[b] .. pos[b] + nvalid[b] - 1``; entries at
+    chunk index >= nvalid[b] (and whole slots with pos < 0) are routed to an
+    out-of-range row index and dropped by the scatter — one scatter per
+    layer, no full-cache select.
+    """
+    B, c = new.shape[0], new.shape[1]
+    S_loc = cache.shape[1]
+    shard = jax.lax.axis_index(axis_name) if axis_name else 0
+    pos = jnp.asarray(pos, jnp.int32)
+    nvalid = jnp.asarray(nvalid, jnp.int32)
+    j = jnp.arange(c, dtype=jnp.int32)[None, :]
+    p = pos[:, None] + j                               # [B, c] global positions
+    local = p - shard * S_loc
+    ok = ((pos[:, None] >= 0) & (j < nvalid[:, None])
+          & (local >= 0) & (local < S_loc))
+    idx = jnp.where(ok, local, S_loc)                  # OOB -> dropped
+    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    return cache.at[b_idx, idx].set(new.astype(cache.dtype), mode="drop")
 
 
 # ---------------------------------------------------------------------------
@@ -341,6 +439,77 @@ def gqa_attn_decode(p, x, cache_k, cache_v, pos, cfg, dims, *,
     o = o * dims.head_mask[None, :, None].astype(o.dtype)
     o = o.reshape(B, 1, dims.H * hd)
     return apply_linear(p["wo"], o, policy), (cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# Ragged chunked decode (multi-token engine step)
+# ---------------------------------------------------------------------------
+def chunk_lengths(pos: jnp.ndarray, nvalid: jnp.ndarray, c: int) -> jnp.ndarray:
+    """Per-query valid-key counts [B, c] for a chunk inserted at ``pos``:
+    query j attends the prefix plus itself (pos + j + 1); rows past nvalid
+    (or idle slots, pos < 0) get 0 and flush to exact zeros."""
+    pos = jnp.asarray(pos, jnp.int32)
+    nvalid = jnp.asarray(nvalid, jnp.int32)
+    j = jnp.arange(c, dtype=jnp.int32)[None, :]
+    ok = (pos[:, None] >= 0) & (j < nvalid[:, None])
+    return jnp.where(ok, pos[:, None] + j + 1, 0)
+
+
+def gqa_decode_core_chunk(q, k_new, v_new, cache_k, cache_v, pos, nvalid, *,
+                          kv_map, scale=None, axis_name=None):
+    """Chunked insert + attend. q: [B, c, H, hd]; k/v_new: [B, c, kv, hd];
+    caches [B, S_loc, kv, hd]; pos/nvalid [B]. Keys land first, then every
+    query attends with its own length (intra-chunk causal by construction)."""
+    cache_k = cache_insert_chunk(cache_k, k_new, pos, nvalid, axis_name)
+    cache_v = cache_insert_chunk(cache_v, v_new, pos, nvalid, axis_name)
+    lengths = chunk_lengths(pos, nvalid, q.shape[1])
+    o = flash_decode_chunk(q, cache_k, cache_v, lengths, kv_map=kv_map,
+                           axis_name=axis_name, scale=scale)
+    return o, cache_k, cache_v
+
+
+def gqa_attn_decode_chunk(p, x, cache_k, cache_v, pos, nvalid, cfg, dims, *,
+                          policy=None, core_wrap=None):
+    """Ragged multi-token decode: x [B, c, D], per-slot start positions
+    ``pos`` [B] and valid counts ``nvalid`` [B]. Returns (out [B, c, D],
+    new caches); rows past a slot's nvalid are exact no-ops."""
+    import functools
+    B, c, _ = x.shape
+    hd = dims.hd
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.maximum(pos[:, None] + jnp.arange(c, dtype=jnp.int32), 0)
+    q, k, v = gqa_qkv(p, x, cfg, dims, positions, policy)
+    kvm = kv_index_map(dims.H, dims.H_true, dims.kv)
+    core = functools.partial(gqa_decode_core_chunk, kv_map=kvm)
+    if core_wrap is not None:
+        core = core_wrap(core)
+    o, cache_k, cache_v = core(q, k, v, cache_k, cache_v, pos, nvalid)
+    o = o * dims.head_mask[None, None, :, None].astype(o.dtype)
+    o = o.reshape(B, c, dims.H * hd)
+    return apply_linear(p["wo"], o, policy), (cache_k, cache_v)
+
+
+def gqa_attn_decode_paged_chunk(p, x, pool, pos, nvalid, block_tables, cfg,
+                                dims, *, policy=None, cache_cfg=None):
+    """Paged ragged decode: x [B, c, D]; the chunk's K/V vectors are packed
+    into the layer pool in ONE multi-token scatter per plane
+    (`cache.pool.paged_insert` with nvalid), then every query attends the
+    block table with its own length through the configured impl."""
+    from repro.cache import paged_attend, paged_insert
+
+    B, c, _ = x.shape
+    hd = dims.hd
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.maximum(pos[:, None] + jnp.arange(c, dtype=jnp.int32), 0)
+    q, k, v = gqa_qkv(p, x, cfg, dims, positions, policy)
+    pool = paged_insert(pool, k, v, pos, block_tables, cache_cfg,
+                        nvalid=nvalid)
+    kvm = kv_index_map(dims.H, dims.H_true, dims.kv)
+    lengths = chunk_lengths(pos, nvalid, c)
+    o = paged_attend(q, pool, lengths, block_tables, cache_cfg, kv_map=kvm)
+    o = o * dims.head_mask[None, None, :, None].astype(o.dtype)
+    o = o.reshape(B, c, dims.H * hd)
+    return apply_linear(p["wo"], o, policy), pool
 
 
 # ---------------------------------------------------------------------------
@@ -450,4 +619,36 @@ def mla_attn_decode(p, x, cache_kv, pos, cfg, dims, *, policy=None, core_wrap=No
         core = core_wrap(core)
     o_c, cache_kv = core(q_eff, kv[:, :, None, :], cache_kv, pos)
     out = _mla_out(p, o_c[:, None], cfg, dims, policy)
+    return out, cache_kv
+
+
+def mla_decode_core_chunk(q_eff, kv_new, cache_kv, pos, nvalid, *, r_kv,
+                          scale, axis_name=None):
+    """Chunked absorbed-MLA core. q_eff [B, c, H, r_kv+dr]; kv_new
+    [B, c, 1, r_kv+dr]; cache_kv [B, S_loc, 1, r_kv+dr]."""
+    cache_kv = cache_insert_chunk(cache_kv, kv_new, pos, nvalid, axis_name)
+    kvm = np.zeros((q_eff.shape[2],), np.int32)
+    lengths = chunk_lengths(pos, nvalid, q_eff.shape[1])
+    o_c = flash_decode_chunk(q_eff, cache_kv, cache_kv[..., :r_kv], lengths,
+                             kv_map=kvm, axis_name=axis_name, scale=scale)
+    return o_c, cache_kv
+
+
+def mla_attn_decode_chunk(p, x, cache_kv, pos, nvalid, cfg, dims, *,
+                          policy=None, core_wrap=None):
+    """Ragged multi-token MLA decode: x [B, c, D]; same contract as
+    `gqa_attn_decode_chunk` on the compressed KV stream."""
+    import functools
+    r_kv, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    B, c, _ = x.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.maximum(pos[:, None] + jnp.arange(c, dtype=jnp.int32), 0)
+    q_eff = _mla_q_eff(p, x, cfg, dims, positions, policy)   # [B, c, H, r+dr]
+    kv = _mla_kv_stream(p, x, cfg, positions, policy)        # [B, c, r+dr]
+    scale = 1.0 / np.sqrt(cfg.qk_nope_dim + dr)
+    core = functools.partial(mla_decode_core_chunk, r_kv=r_kv, scale=scale)
+    if core_wrap is not None:
+        core = core_wrap(core)
+    o_c, cache_kv = core(q_eff, kv[:, :, None, :], cache_kv, pos, nvalid)
+    out = _mla_out(p, o_c, cfg, dims, policy)
     return out, cache_kv

@@ -221,6 +221,69 @@ def block_decode(p, x, cache, pos, kind, cfg, dims, *, policy=None,
     return x, cache
 
 
+def _seq_core_wrap_chunk(ctx: ParallelCtx, n_caches: int):
+    """shard_map wrapper for the CHUNKED insert+attend core (seq-sharded
+    cache): same layout as `_seq_core_wrap` with a chunk dim on q/k/v and
+    the extra replicated [B] nvalid arg."""
+    tp = ctx.tp_axis
+    P4 = P(None, None, None, None)
+    if n_caches == 2:  # gqa: (q, k_new, v_new, ck, cv, pos, nvalid)
+        in_specs = (P4, P4, P4,
+                    P(None, tp, None, None), P(None, tp, None, None),
+                    P(), P())
+        out_specs = (P4, P(None, tp, None, None), P(None, tp, None, None))
+    else:  # mla: (q_eff, kv_new, cache, pos, nvalid)
+        in_specs = (P4, P4, P(None, tp, None, None), P(), P())
+        out_specs = (P4, P(None, tp, None, None))
+
+    def wrap(core):
+        return ctx.shard_map(functools.partial(core, axis_name=tp),
+                             in_specs=in_specs, out_specs=out_specs)
+    return wrap
+
+
+def block_decode_chunk(p, x, cache, pos, nvalid, kind, cfg, dims, *,
+                       policy=None, ctx: Optional[ParallelCtx],
+                       block_tables=None, cache_cfg=None):
+    """Ragged multi-token analogue of `block_decode`: x [B, c, D], per-slot
+    start positions ``pos`` [B] and valid counts ``nvalid`` [B]. Supports
+    the pure-attention families only (gqa / gqa_moe / mla — see
+    `check_chunked_support`); recurrent blocks need a serial state update
+    per token and keep the one-token step. Returns (x, new_cache)."""
+    if kind not in ("gqa", "gqa_moe", "mla"):
+        raise NotImplementedError(
+            f"chunked decode does not support {kind!r} blocks")
+    seq_sharded = ctx is not None and ctx.mesh is not None and ctx.seq_shard_cache
+    paged = cache_cfg is not None and cache_cfg.paged
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "mla":
+        wrap = _seq_core_wrap_chunk(ctx, 1) if seq_sharded else None
+        out, ckv = A.mla_attn_decode_chunk(p["attn"], h, cache["kv"], pos,
+                                           nvalid, cfg, dims, policy=policy,
+                                           core_wrap=wrap)
+        x = x + out
+        cache = {"kv": ckv}
+    elif paged:
+        out, cache = A.gqa_attn_decode_paged_chunk(
+            p["attn"], h, cache, pos, nvalid, block_tables, cfg, dims,
+            policy=policy, cache_cfg=cache_cfg)
+        x = x + out
+    else:
+        wrap = _seq_core_wrap_chunk(ctx, 2) if seq_sharded else None
+        out, (ck, cv) = A.gqa_attn_decode_chunk(
+            p["attn"], h, cache["k"], cache["v"], pos, nvalid, cfg, dims,
+            policy=policy, core_wrap=wrap)
+        x = x + out
+        cache = {"k": ck, "v": cv}
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "gqa_moe":
+        y, _ = M.moe_apply(p["moe"], h2, cfg, ctx, policy, phase="decode")
+        x = x + y
+    else:
+        x = x + F.ffn_apply(p["ffn"], h2, cfg.ffn_activation, policy)
+    return x, cache
+
+
 # ---------------------------------------------------------------------------
 # Cache construction
 # ---------------------------------------------------------------------------
@@ -255,6 +318,23 @@ def check_paged_support(cfg):
     if cfg.sliding_window:
         raise NotImplementedError(
             "paged KV cache does not support sliding-window ring caches yet")
+
+
+def check_chunked_support(cfg):
+    """Chunked (multi-token) decode covers pure-attention families: plain
+    GQA, MoE-GQA and absorbed MLA. Mamba / RG-LRU recurrences integrate
+    state token-by-token (a masked multi-token recurrent scan is the
+    documented next step), and sliding-window ring caches would need
+    chunk-aware ring inserts — those families keep the one-token step."""
+    pat = layer_pattern(cfg)
+    bad = [k for k in pat if k not in ("gqa", "gqa_moe", "mla")]
+    if bad:
+        raise NotImplementedError(
+            f"chunked prefill supports gqa/gqa_moe/mla layers only; "
+            f"{cfg.name} has {sorted(set(bad))}")
+    if cfg.sliding_window:
+        raise NotImplementedError(
+            "chunked prefill does not support sliding-window ring caches yet")
 
 
 def make_cache(cfg, B: int, cap: int, tp: int = 1, dtype=jnp.bfloat16,
@@ -386,21 +466,36 @@ def forward_seq(params, tokens, cfg, *, tp=1, policy=None, ctx=None,
 
 def decode_step(params, token, cache, pos, cfg, *, tp=1, policy=None,
                 ctx=None, dtype=jnp.bfloat16, embeds=None, embed_mask=None,
-                block_tables=None, cache_cfg=None):
+                block_tables=None, cache_cfg=None, nvalid=None):
     """One decode step. token: [B] int32; pos: scalar int32 (insert position)
     or [B] int32 per-slot positions (continuous-batching engine; a negative
     position marks an idle slot whose cache write is suppressed).
+
+    RAGGED MULTI-TOKEN STEP: with token [B, C] int32 the step consumes a
+    variable-length block per slot — ``pos`` [B] is each slot's START
+    position and ``nvalid`` [B] its valid token count this tick (prefilling
+    slots bring a prompt chunk, decoding slots bring 1, idle slots 0).
+    Positions are derived in-step (pos + chunk index), intra-chunk causality
+    is enforced through per-query attention lengths, and the returned logits
+    are taken at each slot's LAST valid token. Pure-attention families only
+    (`check_chunked_support`).
 
     With a paged ``cache_cfg``, ``block_tables`` [B, max_pages] int32 maps
     each slot's logical pages to physical pool pages (same row for every
     layer); the cache pytree holds page pools instead of slot tensors.
 
     ``embeds`` [B, D] + ``embed_mask`` [B] bool optionally override the token
-    embedding per slot — the engine uses this to stream modality prefix
-    embeddings (VLM patches / audio frames) through the same decode step
-    during chunked prefill.
+    embedding per slot (``[B, C, D]`` / ``[B, C]`` in the ragged step) — the
+    engine uses this to stream modality prefix embeddings (VLM patches /
+    audio frames) through the same decode step during chunked prefill.
 
     Returns (logits [B, V], new cache)."""
+    if token.ndim == 2:
+        return _decode_step_chunk(params, token, cache, pos, nvalid, cfg,
+                                  tp=tp, policy=policy, ctx=ctx, dtype=dtype,
+                                  embeds=embeds, embed_mask=embed_mask,
+                                  block_tables=block_tables,
+                                  cache_cfg=cache_cfg)
     dims = model_dims(cfg, tp)
     pat = layer_pattern(cfg)
     L, Pn = cfg.num_layers, len(pat)
@@ -441,4 +536,56 @@ def decode_step(params, token, cache, pos, cfg, *, tp=1, policy=None,
             tails[f"sub{i}"] = nc
         new_cache["tail"] = tails
     logits = _head(params, x, cfg, dims, policy)
+    return logits[:, 0], new_cache
+
+
+def _decode_step_chunk(params, token, cache, pos, nvalid, cfg, *, tp=1,
+                       policy=None, ctx=None, dtype=jnp.bfloat16,
+                       embeds=None, embed_mask=None, block_tables=None,
+                       cache_cfg=None):
+    """Ragged multi-token step body (see `decode_step`): token [B, C],
+    pos/nvalid [B]. Returns (logits [B, V] at each slot's last valid
+    token, new cache)."""
+    dims = model_dims(cfg, tp)
+    pat = layer_pattern(cfg)
+    L, Pn = cfg.num_layers, len(pat)
+    G, R = L // Pn, L % Pn
+    nvalid = jnp.asarray(nvalid, jnp.int32)
+    x = _embed(params, token, cfg, dims, None, dtype, ctx=ctx)    # [B, C, D]
+    if embeds is not None:
+        mask = (embed_mask if embed_mask is not None
+                else jnp.ones(token.shape, bool))
+        x = jnp.where(mask[:, :, None], embeds.astype(x.dtype), x)
+
+    def group_fn(x, xs):
+        gp, gcache = xs
+        new_caches = {}
+        for i in range(Pn):
+            x, nc = block_decode_chunk(gp[f"sub{i}"], x, gcache[f"sub{i}"],
+                                       pos, nvalid, pat[i], cfg, dims,
+                                       policy=policy, ctx=ctx,
+                                       block_tables=block_tables,
+                                       cache_cfg=cache_cfg)
+            new_caches[f"sub{i}"] = nc
+        return x, new_caches
+
+    x, new_layer_caches = jax.lax.scan(group_fn, x,
+                                       (params["layers"], cache["layers"]))
+    new_cache = {"layers": new_layer_caches}
+    if R:
+        tails = {}
+        for i in range(R):
+            x, nc = block_decode_chunk(params["tail"][f"sub{i}"], x,
+                                       cache["tail"][f"sub{i}"], pos, nvalid,
+                                       pat[i], cfg, dims, policy=policy,
+                                       ctx=ctx, block_tables=block_tables,
+                                       cache_cfg=cache_cfg)
+            tails[f"sub{i}"] = nc
+        new_cache["tail"] = tails
+    # logits only at each slot's LAST valid token — the head (the widest
+    # matmul in the step) never runs over discarded prefill positions
+    last = jnp.clip(nvalid - 1, 0, token.shape[1] - 1)[:, None, None]
+    x_last = jnp.take_along_axis(x, jnp.broadcast_to(
+        last, (x.shape[0], 1, x.shape[2])), axis=1)               # [B, 1, D]
+    logits = _head(params, x_last, cfg, dims, policy)
     return logits[:, 0], new_cache

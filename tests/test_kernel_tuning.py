@@ -25,6 +25,34 @@ def test_plans_fit_and_align(scheme, K, N, B):
     assert plan.vmem_bytes == vmem_usage(lay, plan.bb, plan.bk, plan.bn)
 
 
+def test_ams_matmul_defaults_come_from_plan_and_fit_vmem():
+    """ops.ams_matmul with no block overrides must select its tiles via
+    plan_tiles (the VMEM-budgeted plan), stay under budget for every
+    production-ish shape, and still compute correctly — plan_tiles was
+    previously dead code next to hardcoded block_b=8/block_n=256."""
+    s = get_scheme("fp5.33-e2m3")
+    lay = make_layout(s)
+    for K, N, B in [(1536, 512, 4), (4096, 4096, 8), (896, 2048, 64)]:
+        plan = plan_tiles(lay, B, K, N)
+        assert plan.vmem_bytes <= VMEM_BYTES, (K, N, B)
+    # correctness through the kernel with the planned defaults
+    K, N, B = 1536, 512, 4
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32) * 0.02)
+    x = jnp.asarray(rng.standard_normal((B, K)).astype(np.float32))
+    q = quantize_linear(w, s)
+    assert ops.default_tiles(q.packed, B) == plan_tiles(lay, B, K, N)
+    y = ops.ams_matmul(x, q.packed, interpret=True)   # no explicit blocks
+    xb = x.astype(jnp.bfloat16).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.ams_matmul_ref(xb, q.packed)),
+                               rtol=1e-5, atol=1e-5)
+    # explicit overrides still win over the plan
+    y2 = ops.ams_matmul(x, q.packed, interpret=True, block_b=8, block_n=128)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_planned_tiles_run_correctly():
     s = get_scheme("fp5.33-e2m3")
     lay = make_layout(s)
