@@ -25,8 +25,13 @@ given --seed) so both schemes see the IDENTICAL workload.
 `repro.cache`): paged mode stores the cache as block-table-addressed pages
 — packed AMS-e2m2 planes for quantized schemes (paged-AMS, ~3.6x smaller
 at hd=128), bf16 pages for fp16 — and admits by free-page budget instead
-of worst-case slots. Both modes land in the same CSV (registered in
-``benchmarks/run.py``), so fp16 vs AMS-paged serving is one diffable file.
+of worst-case slots. ``--shared-prefix N`` prepends the same N-token
+system prompt to every request: with prefix caching (paged modes, default
+on) the shared pages prefill once and every later request skips them —
+the ``prefix_hit_rate`` / ``cached_frac`` CSV columns report the reuse,
+and the TTFT columns show the win. All modes land in the same CSV
+(registered in ``benchmarks/run.py``), so fp16 vs AMS-paged serving is one
+diffable file.
 
 Run (reduced, CPU):
     PYTHONPATH=src python -m benchmarks.bench_serving --reduced --paged
@@ -43,19 +48,28 @@ import numpy as np
 
 
 def poisson_workload(n_requests: int, rate: float, prompt_mean: int,
-                     gen_tokens: int, vocab: int, seed: int):
+                     gen_tokens: int, vocab: int, seed: int,
+                     shared_prefix: int = 0):
     """Tick-indexed open-loop workload: (arrival_tick, prompt, max_tokens).
 
     Inter-arrival gaps are geometric (discrete-time Poisson process at
     `rate` requests/tick); prompt lengths are Poisson around prompt_mean.
+    With ``shared_prefix=N`` every prompt starts with the same N-token
+    system prompt — the prefix-cache workload: in paged modes each full
+    shared page prefills (and quantizes) once, every later request
+    references it.
     """
     rng = np.random.default_rng(seed)
     gaps = rng.geometric(min(rate, 1.0), n_requests)
     arrivals = np.cumsum(gaps) - gaps[0]  # first request at tick 0
+    prefix = rng.integers(0, vocab, shared_prefix) if shared_prefix else None
     work = []
     for t in arrivals:
         plen = max(1, int(rng.poisson(prompt_mean)))
-        work.append((int(t), rng.integers(0, vocab, plen), gen_tokens))
+        prompt = rng.integers(0, vocab, plen)
+        if prefix is not None:
+            prompt = np.concatenate([prefix, prompt])
+        work.append((int(t), prompt, gen_tokens))
     return work
 
 
@@ -113,6 +127,9 @@ def run_scheme(scheme: str, work, args):
         "tokens": s["tokens_generated"],
         "kv_bytes_per_token": s["kv_bytes_per_token"],
         "kv_compression": s["kv_compression_vs_bf16"],
+        # prefix-cache effectiveness (0.0 in contiguous mode / cache off)
+        "prefix_hit_rate": s.get("prefix_hit_rate", 0.0),
+        "cached_frac": s.get("cached_token_frac", 0.0),
     }
 
 
@@ -138,6 +155,11 @@ def main(argv=None, out_lines=None):
                     help="ragged prefill chunk size C: prefilling slots "
                          "consume up to C prompt tokens per tick (1 = the "
                          "one-token-per-tick step)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend the same N-token system prompt to every "
+                         "request — the prefix-cache workload (paged modes "
+                         "share the N-token pages; watch prefix_hit_rate "
+                         "and ttft)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=0.3,
                     help="mean arrivals per engine tick (Poisson)")
@@ -156,11 +178,14 @@ def main(argv=None, out_lines=None):
     if args.reduced:
         cfg = cfg.reduced()
     work = poisson_workload(args.requests, args.rate, args.prompt_mean,
-                            args.tokens, cfg.vocab_size, args.seed)
+                            args.tokens, cfg.vocab_size, args.seed,
+                            shared_prefix=args.shared_prefix)
 
     mode = args.cache_mode
     if args.chunk > 1:
         mode = f"{mode}/chunk{args.chunk}"
+    if args.shared_prefix:
+        mode = f"{mode}/shared{args.shared_prefix}"
     results = {}
     for scheme in args.schemes.split(","):
         scheme = scheme.strip()
@@ -176,7 +201,9 @@ def main(argv=None, out_lines=None):
                 f"latency_ticks_p99={r['latency_ticks_p99']:.1f} "
                 f"util={r['utilization']:.2f} "
                 f"kv_bytes_per_token={r['kv_bytes_per_token']} "
-                f"kv_compression={r['kv_compression']:.2f}")
+                f"kv_compression={r['kv_compression']:.2f} "
+                f"prefix_hit_rate={r['prefix_hit_rate']:.2f} "
+                f"cached_frac={r['cached_frac']:.2f}")
         print(line, flush=True)
         out_lines.append(line)
 
@@ -194,13 +221,17 @@ def main(argv=None, out_lines=None):
 
 def run(out_lines, quick: bool = False):
     """benchmarks/run.py entry: fp16 vs AMS under the SAME Poisson workload,
-    contiguous AND paged cache modes, plus a ragged chunked-prefill run
-    (chunk=4 — the TTFT columns are what that row moves), all in one CSV."""
+    contiguous AND paged cache modes, a ragged chunked-prefill run (chunk=4
+    — the TTFT columns are what that row moves), and a shared-prefix run
+    (all requests share a 16-token system prompt — prefix_hit_rate /
+    cached_frac / ttft are what prefix caching moves), all in one CSV."""
     argv = ["--quiet", "--requests", "3" if quick else "6",
             "--tokens", "4", "--slots", "2", "--capacity", "32",
             "--rate", "0.5", "--prompt-mean", "6", "--page-size", "8"]
     for extra in (["--contiguous"], ["--paged"],
-                  ["--paged", "--chunk", "4"]):
+                  ["--paged", "--chunk", "4"],
+                  ["--paged", "--chunk", "4", "--shared-prefix", "16",
+                   "--capacity", "48"]):
         main(argv + extra, out_lines=out_lines)
 
 

@@ -8,8 +8,10 @@ experiments/bench_results.txt):
     Table 3 / Fig.6          -> bench_kernel_speedup (analytic Table-3 model
                                 + CPU wall-clock plumbing check)
     Serving (beyond-paper)   -> bench_serving (fp16 vs AMS engine throughput
-                                under one Poisson workload, contiguous AND
-                                paged KV-cache modes in the same CSV)
+                                under one Poisson workload: contiguous,
+                                paged, chunked-prefill, and shared-prefix
+                                (prefix-cache hit rate / cached-token
+                                fraction) rows in the same CSV)
     §Roofline summary        -> bench_roofline (reads experiments/dryrun)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
@@ -66,7 +68,7 @@ def main() -> None:
     print("# === kernel speedup (paper Table 3) ===", flush=True)
     bench_kernel_speedup.run(out_lines)
 
-    print("# === serving throughput: contiguous vs paged KV cache ===",
+    print("# === serving: contiguous vs paged vs chunked vs shared-prefix ===",
           flush=True)
     from benchmarks import bench_serving
     bench_serving.run(out_lines, quick=args.quick)

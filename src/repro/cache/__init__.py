@@ -3,7 +3,9 @@
 Layers (host -> device -> kernel):
 
   * `config.CacheConfig`      — cache-mode selection + derived sizes
-  * `allocator.PageAllocator` — host-side free list + block-table rows
+  * `allocator.PageAllocator` — host-side refcounting free list, block-hash
+                                prefix index (shared pages), block-table
+                                rows
   * `pool`                    — device page pools (bf16 or AMS packed
                                 planes), single-scatter insert, page gather
   * `ref`                     — lattice-exact dequantize-then-attend oracle
@@ -22,7 +24,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from .allocator import PageAllocator  # noqa: F401
+from .allocator import PageAllocator, prefix_page_hashes  # noqa: F401
 from .config import CACHE_KINDS, PAGED_KINDS, CacheConfig  # noqa: F401
 from .pool import (  # noqa: F401
     compression_vs_bf16,

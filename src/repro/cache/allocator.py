@@ -1,32 +1,74 @@
-"""Host-side page allocator + per-request block tables.
+"""Host-side refcounted page allocator + content-addressed prefix cache.
 
-The allocator owns the free list of the device page pool. It is pure host
-state (plain ints), mirroring the scheduler's split: device tensors never
-hold allocation metadata, so allocation/free is O(pages) numpy work per
-request, not a jitted op.
+The allocator owns the free/evictable state of the device page pool. It is
+pure host state (plain ints and hashes), mirroring the scheduler's split:
+device tensors never hold allocation metadata, so allocation/free/match is
+O(pages) numpy work per request, not a jitted op.
+
+Every page is in exactly ONE of three states:
+
+    free (uncached)   --alloc-->   referenced (refcount >= 1)
+    referenced        --free-->    free              (never published)
+    referenced        --free-->    cached-evictable  (hash in the index)
+    cached-evictable  --alloc-->   referenced        (prefix hit, ref += 1)
+    cached-evictable  --evict-->   referenced        (reclaimed, hash dropped)
+
+Prefix caching: completed PROMPT pages are content-addressed by a
+prefix-chain block hash (`prefix_page_hashes`) committing to every token of
+the page and its predecessors plus the cache scheme. Because the paged-AMS
+pool quantizes each inserted K/V vector deterministically per (token, head)
+(`core/kv_quant`), equal hashes imply bit-identical page planes — so a
+later request with the same prompt prefix references the SAME physical page
+(refcount += 1, read-only) and skips prefilling it entirely. Pages whose
+refcount drains to zero keep their cached content in an LRU until memory
+pressure reclaims them (least-recently-released first).
 
 Pages are reserved for a request's WORST-CASE footprint at admission
-(`ceil(kv_need / page_size)` pages) and freed when the request completes —
-admission-time reservation keeps the engine preemption-free, exactly like
-the contiguous engine's submit-time capacity check, while many short
-requests now reserve only their own pages instead of whole worst-case
-slots.
+(`ceil(kv_need / page_size)` pages), keeping the engine preemption-free,
+but only the UNCACHED page count charges the free budget. `free` raises on
+an unknown request id — a double free would otherwise silently corrupt the
+free list.
 
 Page index 0 is a valid data page like any other; block-table rows are
 padded with 0 for unused entries. That is safe because attention masks
 every key position >= the request's current length, so a padded entry is
-never read as data.
+never read as data — even when page 0 is simultaneously shared by other
+requests.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 
+def prefix_page_hashes(tokens, page_size: int,
+                       content_key: str = "") -> Tuple[bytes, ...]:
+    """Prefix-chain hash per FULL page of `tokens`.
+
+    Hash j commits to every token of pages 0..j, the page size, and
+    `content_key` (the cache scheme — bf16 and AMS pages of the same tokens
+    hold different bytes, and different AMS schemes different codes), so
+    equal hashes imply bit-identical page content under the deterministic
+    per-(token, head) insert quantization. A partial trailing page gets no
+    hash: its remaining slots are filled by request-specific tokens.
+    """
+    toks = np.asarray(tokens, np.int64).reshape(-1)
+    h = hashlib.sha256(f"{content_key}|{page_size}".encode()).digest()
+    out = []
+    for j in range(toks.shape[0] // page_size):
+        page = toks[j * page_size:(j + 1) * page_size]
+        h = hashlib.sha256(h + page.tobytes()).digest()
+        out.append(h)
+    return tuple(out)
+
+
 class PageAllocator:
-    """Free-list allocator over `num_pages` fixed-size pages."""
+    """Refcounting allocator over `num_pages` fixed-size pages with a
+    block-hash index of cached, evictable prefix pages (module docstring)."""
 
     def __init__(self, num_pages: int, page_size: int):
         if num_pages < 1:
@@ -36,40 +78,147 @@ class PageAllocator:
         # LIFO free list: freshly freed pages are reused first (their planes
         # are still warm in cache on real hardware)
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        # refcount-0 pages still holding published content, least recently
+        # released first — the eviction order under memory pressure
+        self._lru: "OrderedDict[int, bytes]" = OrderedDict()
+        self._index: Dict[bytes, int] = {}   # block hash -> resident page
+        self._hash: Dict[int, bytes] = {}    # page -> its published hash
+        self._ref: Dict[int, int] = {}       # page -> refcount (>0 only)
         self._owned: Dict[int, List[int]] = {}   # rid -> pages
+        # monotonic counters (reset via reset_stats)
+        self.hits = 0         # cacheable pages served from the index at alloc
+        self.misses = 0       # cacheable (hashed) pages allocated private —
+        #                       generation-tail/partial pages can never hit,
+        #                       so they don't dilute prefix_hit_rate
+        self.evictions = 0    # cached pages reclaimed under pressure
 
     # ------------------------------------------------------------- queries
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Reclaimable supply: truly-free pages plus evictable cached pages
+        (the admission budget — cached pages are given up under pressure)."""
+        return len(self._free) + len(self._lru)
 
     @property
     def used_pages(self) -> int:
-        return self.num_pages - len(self._free)
+        """Pages referenced by at least one in-flight request."""
+        return self.num_pages - self.free_pages
+
+    @property
+    def cached_pages(self) -> int:
+        """Evictable pages kept resident for future prefix hits."""
+        return len(self._lru)
 
     def pages_needed(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 0) // self.page_size)
 
-    def can_alloc(self, n_pages: int) -> bool:
-        return n_pages <= len(self._free)
+    def match_prefix(self, hashes: Sequence[bytes]) -> int:
+        """Longest resident prefix: how many leading `hashes` the index
+        holds. Pure query — pins nothing."""
+        n = 0
+        for h in hashes:
+            if h not in self._index:
+                break
+            n += 1
+        return n
+
+    def _admission(self, n_pages: int,
+                   hashes: Sequence[bytes]) -> Tuple[int, bool]:
+        """(matched prefix length, whether the request fits) — the single
+        source of the budget arithmetic `can_alloc` and `alloc` share, so
+        can_alloc() == True structurally guarantees alloc() succeeds. Only
+        the UNCACHED page count charges the reclaimable supply; matched
+        pages sitting in the LRU are pinned by the alloc, not spent."""
+        matched = min(self.match_prefix(hashes), n_pages)
+        pinned_from_lru = sum(1 for h in list(hashes)[:matched]
+                              if self._index[h] in self._lru)
+        return matched, n_pages - matched <= self.free_pages - pinned_from_lru
+
+    def can_alloc(self, n_pages: int, hashes: Sequence[bytes] = ()) -> bool:
+        """True iff `alloc(rid, n_pages, hashes)` would succeed."""
+        return self._admission(n_pages, hashes)[1]
 
     # ------------------------------------------------------------ mutation
-    def alloc(self, rid: int, n_pages: int) -> List[int]:
-        """Reserve `n_pages` for request `rid`. Raises if the pool is short
-        (callers gate on `can_alloc` — the scheduler's admission check)."""
+    def alloc(self, rid: int, n_pages: int,
+              hashes: Sequence[bytes] = ()) -> Tuple[List[int], int]:
+        """Reserve `n_pages` for request `rid`, shared-prefix pages first:
+        the longest resident prefix of `hashes` is SHARED (refcount += 1,
+        read-only for this request); the remainder is private, drawn from
+        the free list or — under pressure — by evicting least-recently-used
+        cached pages. Raises if the pool is short (callers gate on
+        `can_alloc` — the scheduler's admission check). Returns
+        ``(pages, n_shared)`` — the page list and the authoritative count
+        of leading shared pages, which callers MUST use (not their own
+        `match_prefix` rerun) to place their first insert position."""
         if rid in self._owned:
             raise ValueError(f"request {rid} already holds pages")
-        if not self.can_alloc(n_pages):
+        matched, fits = self._admission(n_pages, hashes)
+        if not fits:
             raise RuntimeError(
-                f"page pool exhausted: need {n_pages}, free {len(self._free)}")
-        pages = [self._free.pop() for _ in range(n_pages)]
+                f"page pool exhausted: need {n_pages}, free {self.free_pages}")
+        pages: List[int] = []
+        for h in list(hashes)[:matched]:        # pin the shared prefix
+            p = self._index[h]
+            if p in self._lru:
+                del self._lru[p]
+            self._ref[p] = self._ref.get(p, 0) + 1
+            pages.append(p)
+        for _ in range(n_pages - matched):      # private (insert-target)
+            if self._free:
+                p = self._free.pop()
+            else:                               # reclaim coldest cached page
+                p, h = self._lru.popitem(last=False)
+                del self._index[h]
+                del self._hash[p]
+                self.evictions += 1
+            self._ref[p] = 1
+            pages.append(p)
+        self.hits += matched
+        self.misses += min(len(hashes), n_pages) - matched
         self._owned[rid] = pages
-        return pages
+        return pages, matched
+
+    def publish(self, rid: int, h: bytes, page: int) -> bool:
+        """Register a COMPLETED private page under its block hash so later
+        requests can share it. No-op (False) when the hash is already
+        resident — first writer wins; the duplicate page stays private and
+        returns to the free list on release. Published pages stay
+        bit-immutable because writers only ever insert past their cached
+        prefix (asserted by the engine)."""
+        if page not in self._owned.get(rid, ()):
+            raise ValueError(f"request {rid} does not own page {page}")
+        if h in self._index or page in self._hash:
+            return False
+        self._index[h] = page
+        self._hash[page] = h
+        return True
 
     def free(self, rid: int) -> int:
-        """Release every page owned by `rid`; returns how many."""
-        pages = self._owned.pop(rid, [])
-        self._free.extend(pages)
+        """Release every page owned by `rid` (refcount -= 1); pages whose
+        count drains to zero return to the free list, or to the evictable
+        LRU tail when they hold published content. Returns how many pages
+        the request held. Raises KeyError on an unknown rid: a double free
+        would otherwise push pages onto the free list while other requests
+        still reference them."""
+        if rid not in self._owned:
+            raise KeyError(
+                f"free of unknown request {rid} (double free, or never "
+                "allocated)")
+        pages = self._owned.pop(rid)
+        for p in pages:
+            n = self._ref.get(p, 0)
+            if n <= 0:
+                raise RuntimeError(
+                    f"page {p} released with refcount {n}: allocator state "
+                    "corrupt")
+            if n == 1:
+                del self._ref[p]
+                if p in self._hash:
+                    self._lru[p] = self._hash[p]   # most recently released
+                else:
+                    self._free.append(p)
+            else:
+                self._ref[p] = n - 1
         return len(pages)
 
     def block_table_row(self, rid: int, width: int) -> np.ndarray:
@@ -81,3 +230,42 @@ class PageAllocator:
         row = np.zeros(width, np.int32)
         row[: len(pages)] = pages
         return row
+
+    # ---------------------------------------------------------- accounting
+    def stats(self) -> Dict[str, float]:
+        """Counter snapshot (`ServeEngine.stats()` re-exports these)."""
+        looked = self.hits + self.misses
+        return {
+            "pages_total": self.num_pages,
+            "pages_in_use": self.num_pages - self.free_pages,
+            "pages_cached_evictable": len(self._lru),
+            "pages_free_uncached": len(self._free),
+            "prefix_hit_pages": self.hits,
+            "prefix_miss_pages": self.misses,
+            "prefix_hit_rate": self.hits / looked if looked else 0.0,
+            "prefix_evictions": self.evictions,
+        }
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = self.evictions = 0
+
+    def check_invariants(self) -> None:
+        """Structural invariants, used by the property tests: every page is
+        in exactly one of {free, cached-evictable, referenced}; refcounts
+        equal owner multiplicity; the hash index is a bijection onto
+        resident published pages."""
+        free, lru, ref = set(self._free), set(self._lru), set(self._ref)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        assert not (free & lru) and not (free & ref) and not (lru & ref), \
+            "page in two lifecycle states at once"
+        assert (free | lru | ref) == set(range(self.num_pages)), \
+            "pages leaked or invented"
+        counts: Dict[int, int] = {}
+        for pages in self._owned.values():
+            for p in pages:
+                counts[p] = counts.get(p, 0) + 1
+        assert counts == self._ref, "refcounts != owner multiplicity"
+        assert all(n > 0 for n in self._ref.values())
+        assert self._index == {h: p for p, h in self._hash.items()}, \
+            "hash index not a bijection"
+        assert set(self._hash) <= (lru | ref), "published hash on free page"

@@ -35,6 +35,9 @@ class CacheConfig:
     kv_scheme: str = "fp4.25-e2m2"   # AMS scheme for paged_ams pages
     kv_strategy: str = "set_lsb"     # mantissa-sharing strategy at insert
     impl: str = "ref"                # ref | pallas | pallas_interpret
+    prefix_cache: bool = True        # share completed prompt pages across
+    #                                  requests (paged modes; see
+    #                                  docs/paged_cache.md §Prefix caching)
 
     def __post_init__(self):
         kind = self.kind.replace("-", "_")
@@ -54,6 +57,16 @@ class CacheConfig:
     @property
     def quantized(self) -> bool:
         return self.kind == "paged_ams"
+
+    @property
+    def content_key(self) -> str:
+        """String committed into prefix-cache block hashes: two requests may
+        share a physical page only when every byte of the page would be
+        identical, which holds exactly when the storage scheme matches (the
+        insert quantization is deterministic per (token, head))."""
+        if self.quantized:
+            return f"{self.kind}/{self.kv_scheme}/{self.kv_strategy}"
+        return self.kind
 
     def sized(self, *, capacity: int, slots: int) -> "CacheConfig":
         """Fill derived sizes from the engine's (slots, capacity) request:

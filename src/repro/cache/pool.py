@@ -91,6 +91,11 @@ def paged_insert(pool: Dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
     entries (default: every entry of non-idle slots — the single-token
     contract when c == 1); ``block_table`` is [B, max_pages_per_seq] int32.
     AMS pools quantize each written vector ONCE here, history untouched.
+
+    Block-table rows may mix SHARED (prefix-cached, read-only) and private
+    pages: the insert never distinguishes them — it writes wherever
+    ``pos`` points — so callers must keep ``pos`` past the shared prefix
+    (the engine starts each slot at its cached length and asserts it).
     """
     c = k_new.shape[1]
     pos = jnp.asarray(pos, jnp.int32)

@@ -21,6 +21,16 @@ Architecture (Orca-style iteration-level scheduling):
     gated on the free-PAGE budget at admit time (paged — short requests
     reserve only their own pages, not worst-case slots), so nothing is
     ever preempted mid-flight;
+  * completed PROMPT pages are PREFIX-CACHED across requests (paged modes,
+    on by default; ``CacheConfig(prefix_cache=False)`` disables): each full
+    prompt page is content-addressed by a prefix-chain hash, and a request
+    whose prompt shares a cached page-aligned prefix references the SAME
+    physical pages (refcounted, read-only) and starts prefill at the cached
+    length — a shared 1k-token system prompt prefills once, not once per
+    request. Admission charges only the uncached page count; refcount-0
+    cached pages stay resident in an LRU until memory pressure evicts them.
+    Reuse is bit-exact because the pool's insert quantization is
+    deterministic per (token, head);
   * prefill is CHUNKED INTO THE DECODE BATCH as a RAGGED MULTI-TOKEN STEP:
     each tick, every active slot contributes a variable-length block of up
     to ``prefill_chunk`` tokens — prefilling slots consume a prompt chunk
@@ -64,7 +74,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache import CacheConfig, PageAllocator, compression_vs_bf16
+from repro.cache import (
+    CacheConfig,
+    PageAllocator,
+    compression_vs_bf16,
+    prefix_page_hashes,
+)
 from repro.configs import get_config
 from repro.configs.base import RunConfig
 from repro.core.policy import QuantPolicy
@@ -160,6 +175,8 @@ class ServeEngine:
         self._rid = itertools.count()
         self._tick_s: List[float] = []         # wall seconds per non-idle tick
         self._tick_tokens: List[int] = []      # tokens generated per tick
+        self._prompt_tokens = 0                # prompt positions admitted
+        self._cached_tokens = 0                # ... served from shared pages
 
     # ------------------------------------------------------------- frontend
     def submit(self, prompt, max_tokens: int,
@@ -179,6 +196,13 @@ class ServeEngine:
                     f"got {prefix_embeds.shape}")
         req = Request(rid=next(self._rid), prompt=prompt,
                       max_tokens=max_tokens, prefix_embeds=prefix_embeds)
+        ccfg = self.cache_cfg
+        if ccfg.paged and ccfg.prefix_cache and prefix_embeds is None:
+            # chain hash per FULL prompt page — the prefix-cache identity
+            # (modality prefixes are request-local floats, not hashable
+            # token pages, so VLM/audio requests skip the cache)
+            req.page_hashes = prefix_page_hashes(
+                req.prompt, ccfg.page_size, ccfg.content_key)
         return self.sched.submit(req, self.tick)
 
     @property
@@ -212,30 +236,41 @@ class ServeEngine:
             room = self.token_budget - self.active_count
             fits = None
             if paged:
-                # pages are allocated after admit() returns, so the budget
-                # check must count pages already promised THIS tick — admit's
-                # contract (fits(head) True => head is admitted) makes the
-                # running counter safe
-                promised = 0
+                ps = self.cache_cfg.page_size
 
+                # cache-aware admission: the longest resident prefix of the
+                # request's page hashes is SHARED (pinned, read-only) and
+                # only the uncached page count charges the free budget.
+                # Allocation happens right here, inside the check — admit's
+                # contract (fits(head) True => head is admitted) makes the
+                # mutation safe, and it keeps the budget exact when one
+                # tick both pins cached pages and evicts cold ones.
                 def fits(r):
-                    nonlocal promised
                     need = self.alloc.pages_needed(r.kv_need)
-                    if promised + need > self.alloc.free_pages:
+                    # always re-feed at least the last prompt token (its
+                    # logits produce the first generated token), so the
+                    # matchable prefix stops one position short of the end
+                    hashes = r.page_hashes[
+                        : (r.n_prefix + r.prompt_len - 1) // ps]
+                    if not self.alloc.can_alloc(need, hashes):
                         return False
-                    promised += need
+                    r.pages, shared = self.alloc.alloc(r.rid, need, hashes)
+                    r.cached_len = shared * ps
+                    r.published = shared
                     return True
             for slot, req in self.sched.admit(free, self.tick, fits=fits,
                                               max_admit=max(0, room)):
                 if paged:
-                    req.pages = self.alloc.alloc(
-                        req.rid, self.alloc.pages_needed(req.kv_need))
                     self.block_tables[slot] = self.alloc.block_table_row(
                         req.rid, self.block_tables.shape[1])
+                    self._prompt_tokens += req.n_prefix + req.prompt_len
+                    self._cached_tokens += req.cached_len
                 else:
                     self.cache = self._reset(self.cache, slot)
                 self.active[slot] = req
-                self.fed[slot] = 0
+                # prefill skip: cached pages already hold positions
+                # [0, cached_len), so this slot starts feeding there
+                self.fed[slot] = req.cached_len
 
             if self.active_count == 0:
                 # idle ticks still advance the engine clock — open-loop
@@ -271,6 +306,12 @@ class ServeEngine:
                 if req is None:
                     continue
                 i = int(self.fed[s])
+                # shared (read-only) pages cover exactly [0, cached_len):
+                # this tick's inserts start at i, so they only ever land in
+                # the request's private pages
+                assert i >= req.cached_len, (
+                    f"slot {s}: insert at {i} would write a shared page "
+                    f"(cached prefix {req.cached_len})")
                 pos[s] = i
                 for j in range(int(nvalid[s])):
                     idx = i + j
@@ -309,6 +350,17 @@ class ServeEngine:
                 i = int(self.fed[s])
                 n = int(nvalid[s])
                 self.fed[s] = i + n
+                if paged and req.page_hashes:
+                    # publish full PROMPT pages as prefill crosses their
+                    # boundaries: content-addressed, so an identical prefix
+                    # admitted later references the same physical page.
+                    # Pages holding generated tokens are never published.
+                    done = min(int(self.fed[s]), req.prompt_len)
+                    while (req.published + 1) * self.cache_cfg.page_size <= done:
+                        j = req.published
+                        self.alloc.publish(req.rid, req.page_hashes[j],
+                                           req.pages[j])
+                        req.published = j + 1
                 if i + n - 1 >= req.n_prefix + req.prompt_len - 1:
                     # this chunk consumed the last prompt token or a generated
                     # token -> the last valid position's argmax is the next
@@ -349,6 +401,10 @@ class ServeEngine:
         self._tick_s = []
         self._tick_tokens = []
         self.finished = []
+        self._prompt_tokens = 0
+        self._cached_tokens = 0
+        if self.alloc is not None:
+            self.alloc.reset_stats()
 
     # ----------------------------------------------------------- accounting
     def kv_bytes_per_token(self) -> int:
@@ -400,4 +456,8 @@ class ServeEngine:
         }
         if self.alloc is not None:
             out["free_pages"] = self.alloc.free_pages
+            out.update(self.alloc.stats())
+            out["cached_token_frac"] = (
+                self._cached_tokens / self._prompt_tokens
+                if self._prompt_tokens else 0.0)
         return out

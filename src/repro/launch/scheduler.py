@@ -10,10 +10,15 @@ preempt or re-admit mid-flight.
 Policy is deliberately the simplest thing that is production-shaped: strict
 FIFO admission into any free slot (no reordering, no priority tiers). For
 the paged KV cache the engine passes ``admit(..., fits=...)`` — the
-free-PAGE budget check — so admission is gated on the pooled page supply
-instead of worst-case per-slot capacity; strict FIFO is preserved by
-head-of-line blocking (a queued request that doesn't fit stops admission
-rather than being jumped).
+CACHE-AWARE free-page budget check: it matches the request's prompt-page
+hashes against the allocator's prefix index (longest resident prefix) and
+charges only the UNCACHED page count against the free budget, so a request
+whose prompt is mostly cached admits even under page pressure. Strict FIFO
+is preserved by head-of-line blocking (a queued request that doesn't fit
+stops admission rather than being jumped). Because ``fits`` returning True
+guarantees admission, the engine's check allocates pages directly — the
+matched prefix is pinned (refcount += 1) and recorded as ``cached_len`` so
+the engine can skip prefilling it.
 """
 
 from __future__ import annotations
@@ -42,6 +47,12 @@ class Request:
     slot: int = -1
     tokens: List[int] = dataclasses.field(default_factory=list)
     pages: List[int] = dataclasses.field(default_factory=list)  # paged mode
+
+    # prefix caching (paged modes, engine-filled — see cache.allocator):
+    page_hashes: Tuple[bytes, ...] = ()   # chain hash per FULL prompt page
+    cached_len: int = 0    # positions served from shared pages at admission;
+    #                        prefill starts at this position (prefill skip)
+    published: int = 0     # prompt pages published to the prefix index so far
 
     def __post_init__(self):
         # the [P] int32 contract above is load-bearing: the engine feeds
@@ -124,7 +135,10 @@ class FIFOScheduler:
         before the request's first token is fed.
 
         ``fits(req)`` (optional) is an extra admission gate — the paged
-        engine passes its free-page budget check. A queue head that does
+        engine passes its cache-aware free-page budget check (longest
+        resident prefix matched, only uncached pages charged; returning
+        True also performs the page allocation, which is safe because True
+        here guarantees the request is admitted). A queue head that does
         not fit BLOCKS admission (strict FIFO, no overtaking).
 
         ``max_admit`` (optional) caps admissions this tick — the chunked

@@ -315,9 +315,14 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
 
     With a paged ``cache_cfg`` (see `repro.cache.CacheConfig`), the cache
     pytree holds PAGE POOLS and the step takes the per-slot block tables as
-    an extra [B, max_pages_per_seq] int32 arg after the cache. Pools are
-    replicated over the mesh (sharding pools over kv heads is the
-    documented next step); the slot-masking contract is unchanged.
+    an extra [B, max_pages_per_seq] int32 arg after the cache. A block-table
+    row may MIX pages: a shared (read-only, prefix-cached) page prefix
+    followed by the slot's private insert-target pages. The step needs no
+    distinction — reads walk the whole row, and writes only ever land in
+    private pages because the engine starts each slot's positions at its
+    cached length (asserted host-side per tick). Pools are replicated over
+    the mesh (sharding pools over kv heads is the documented next step);
+    the slot-masking contract is unchanged.
     """
     ctx = make_ctx(mesh, "decode")
     paged = cache_cfg is not None and cache_cfg.paged

@@ -68,8 +68,9 @@ def test_allocator_reserve_free():
     al = PageAllocator(num_pages=6, page_size=8)
     assert al.pages_needed(17) == 3 and al.pages_needed(16) == 2
     assert al.pages_needed(0) == 0
-    p0 = al.alloc(0, 3)
-    p1 = al.alloc(1, 2)
+    p0, sh0 = al.alloc(0, 3)
+    p1, _ = al.alloc(1, 2)
+    assert sh0 == 0                       # cold pool: nothing shared
     assert len(set(p0) | set(p1)) == 5 and al.free_pages == 1
     assert not al.can_alloc(2)
     with pytest.raises(RuntimeError, match="exhausted"):
@@ -78,7 +79,10 @@ def test_allocator_reserve_free():
     assert row.dtype == np.int32 and list(row[:3]) == p0 and row[3] == 0
     assert al.free(0) == 3
     assert al.free_pages == 4
-    assert al.free(0) == 0  # double-free is a no-op
+    with pytest.raises(KeyError, match="double free"):
+        al.free(0)          # double-free corrupts the free list: raise
+    with pytest.raises(KeyError, match="unknown request"):
+        al.free(99)         # unknown rid too
 
 
 def test_cache_config_validation_and_sizing():
