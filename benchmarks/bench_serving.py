@@ -21,6 +21,15 @@ that needs accelerator HBM bandwidth (see benchmarks/bench_kernel_speedup.py
 for the analytic Table-3 model). Arrivals are tick-indexed (deterministic
 given --seed) so both schemes see the IDENTICAL workload.
 
+``--temperature`` / ``--top-k`` / ``--top-p`` turn on per-request ON-DEVICE
+stochastic sampling (see ``repro.launch.sampling``): every request carries
+its own ``SamplingParams`` seeded by its workload index, so the sampled
+run is deterministic given ``--seed`` and the TTFT/latency percentile
+columns report a realistic sampled workload instead of pure greedy.
+``--stop-ids N`` additionally gives each request N random EOS-like stop
+tokens, so some streams terminate early instead of at the length cap
+(variable-length workload; watch the ``gen_tok_mean`` column).
+
 ``--paged`` / ``--contiguous`` selects the KV-cache mode (see
 `repro.cache`): paged mode stores the cache as block-table-addressed pages
 — packed AMS-e2m2 planes for quantized schemes (paged-AMS, ~3.6x smaller
@@ -85,7 +94,23 @@ def cache_config_for(scheme: str, args):
     return CacheConfig(kind=kind, page_size=args.page_size, impl=cache_impl)
 
 
-def run_scheme(scheme: str, work, args):
+def sampling_for(args, i: int, vocab: int):
+    """Per-request SamplingParams for workload item i (None = greedy).
+    Seeded by the workload index, so the sampled run replays
+    bit-identically across schemes and engine instances."""
+    if args.temperature <= 0 and not args.stop_ids:
+        return None
+    from repro.launch.sampling import SamplingParams
+    stop = ()
+    if args.stop_ids:
+        stop = tuple(np.random.default_rng(args.seed + i)
+                     .integers(0, vocab, args.stop_ids).tolist())
+    return SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                          top_p=args.top_p, seed=args.seed + i,
+                          stop_token_ids=stop)
+
+
+def run_scheme(scheme: str, work, args, vocab: int):
     from repro.launch.engine import ServeEngine
 
     eng = ServeEngine(args.arch, reduced=args.reduced, scheme=scheme,
@@ -101,12 +126,13 @@ def run_scheme(scheme: str, work, args):
     assert warm.done
     eng.reset_metrics()
 
-    reqs, pending = [], list(work)
+    reqs, pending = [], [(i, *w) for i, w in enumerate(work)]
     util = []
     while pending or eng.has_work:
-        while pending and pending[0][0] <= eng.tick:
-            _, prompt, mt = pending.pop(0)
-            reqs.append(eng.submit(prompt, mt))
+        while pending and pending[0][1] <= eng.tick:
+            i, _, prompt, mt = pending.pop(0)
+            reqs.append(eng.submit(prompt, mt,
+                                   sampling=sampling_for(args, i, vocab)))
         eng.step()
         util.append(eng.active_count / args.slots)
 
@@ -125,6 +151,10 @@ def run_scheme(scheme: str, work, args):
         "utilization": float(np.mean(util)),
         "ticks": s["ticks"],
         "tokens": s["tokens_generated"],
+        # variable-length workloads (sampling + stop tokens): mean actual
+        # generated length and how many requests stopped before the cap
+        "gen_tok_mean": s["gen_tokens_mean"],
+        "stopped_early": s["stopped_early"],
         "kv_bytes_per_token": s["kv_bytes_per_token"],
         "kv_compression": s["kv_compression_vs_bf16"],
         # prefix-cache effectiveness (0.0 in contiguous mode / cache off)
@@ -160,6 +190,14 @@ def main(argv=None, out_lines=None):
                          "request — the prefix-cache workload (paged modes "
                          "share the N-token pages; watch prefix_hit_rate "
                          "and ttft)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy); "
+                         "sampled runs are seeded per request index")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--stop-ids", type=int, default=0,
+                    help="give each request N random stop tokens "
+                         "(EOS-like early termination; max 8)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=0.3,
                     help="mean arrivals per engine tick (Poisson)")
@@ -186,13 +224,18 @@ def main(argv=None, out_lines=None):
         mode = f"{mode}/chunk{args.chunk}"
     if args.shared_prefix:
         mode = f"{mode}/shared{args.shared_prefix}"
+    if args.temperature > 0:
+        mode = f"{mode}/sampled-t{args.temperature:g}-p{args.top_p:g}"
+    if args.stop_ids:
+        mode = f"{mode}/stop{args.stop_ids}"
     results = {}
     for scheme in args.schemes.split(","):
         scheme = scheme.strip()
-        results[scheme] = r = run_scheme(scheme, work, args)
+        results[scheme] = r = run_scheme(scheme, work, args, cfg.vocab_size)
         us_per_tok = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
         line = (f"serving/{scheme}/{mode},{us_per_tok:.1f},"
                 f"tokens_per_s={r['tokens_per_s']:.2f} "
+                f"ticks={r['ticks']} "
                 f"p50_ms={r['p50_ms']:.2f} p99_ms={r['p99_ms']:.2f} "
                 f"req_latency_ticks={r['req_latency_ticks']:.1f} "
                 f"ttft_ticks_p50={r['ttft_ticks_p50']:.1f} "
@@ -200,6 +243,8 @@ def main(argv=None, out_lines=None):
                 f"latency_ticks_p50={r['latency_ticks_p50']:.1f} "
                 f"latency_ticks_p99={r['latency_ticks_p99']:.1f} "
                 f"util={r['utilization']:.2f} "
+                f"gen_tok_mean={r['gen_tok_mean']:.2f} "
+                f"stopped_early={r['stopped_early']} "
                 f"kv_bytes_per_token={r['kv_bytes_per_token']} "
                 f"kv_compression={r['kv_compression']:.2f} "
                 f"prefix_hit_rate={r['prefix_hit_rate']:.2f} "
@@ -222,16 +267,21 @@ def main(argv=None, out_lines=None):
 def run(out_lines, quick: bool = False):
     """benchmarks/run.py entry: fp16 vs AMS under the SAME Poisson workload,
     contiguous AND paged cache modes, a ragged chunked-prefill run (chunk=4
-    — the TTFT columns are what that row moves), and a shared-prefix run
+    — the TTFT columns are what that row moves), a shared-prefix run
     (all requests share a 16-token system prompt — prefix_hit_rate /
-    cached_frac / ttft are what prefix caching moves), all in one CSV."""
+    cached_frac / ttft are what prefix caching moves), and a SAMPLED run
+    (per-request temperature-0.8/top-p-0.9 with stop tokens — the
+    TTFT/latency percentiles under a realistic stochastic, variable-length
+    workload), all in one CSV."""
     argv = ["--quiet", "--requests", "3" if quick else "6",
             "--tokens", "4", "--slots", "2", "--capacity", "32",
             "--rate", "0.5", "--prompt-mean", "6", "--page-size", "8"]
     for extra in (["--contiguous"], ["--paged"],
                   ["--paged", "--chunk", "4"],
                   ["--paged", "--chunk", "4", "--shared-prefix", "16",
-                   "--capacity", "48"]):
+                   "--capacity", "48"],
+                  ["--paged", "--temperature", "0.8", "--top-p", "0.9",
+                   "--stop-ids", "4"]):
         main(argv + extra, out_lines=out_lines)
 
 

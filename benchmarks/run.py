@@ -9,12 +9,27 @@ experiments/bench_results.txt):
                                 + CPU wall-clock plumbing check)
     Serving (beyond-paper)   -> bench_serving (fp16 vs AMS engine throughput
                                 under one Poisson workload: contiguous,
-                                paged, chunked-prefill, and shared-prefix
+                                paged, chunked-prefill, shared-prefix
                                 (prefix-cache hit rate / cached-token
-                                fraction) rows in the same CSV)
+                                fraction) and sampled (per-request
+                                temperature/top-p + stop tokens) rows in
+                                the same CSV)
     §Roofline summary        -> bench_roofline (reads experiments/dryrun)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+
+REGRESSION GATE (``--check benchmarks/baseline.csv``): after the sweep,
+the serving rows are compared against a committed baseline and the run
+exits non-zero on a >15% regression in any deterministic serving metric —
+engine ticks to drain the fixed workload (the decode-tick throughput
+measure), TTFT / latency tick percentiles, or kv-bytes-per-token. These
+are exact given ``--seed``, so ANY drift is a real behaviour change, not
+runner noise. Wall-clock-derived numbers (tokens/s, ms percentiles, the
+``x=`` speedup ratio) are NOT gated — they do not transfer across
+machines, and the --quick workload is too small to time reliably even as
+a ratio. A decode-throughput regression still trips the gate as extra
+engine ticks on the fixed workload. Regenerate the baseline after an
+intentional change with ``--write-baseline benchmarks/baseline.csv``.
 """
 
 from __future__ import annotations
@@ -50,11 +65,91 @@ def bench_roofline(out_lines):
         out_lines.append(line)
 
 
+# --------------------------------------------------------------------------
+# bench regression gate
+# --------------------------------------------------------------------------
+# deterministic serving metrics (exact given the workload seed): any move
+# past the tolerance is a real scheduling/termination/layout change
+GATED = {
+    "ticks": ("higher", 0.15),
+    "ttft_ticks_p50": ("higher", 0.15),
+    "ttft_ticks_p99": ("higher", 0.15),
+    "latency_ticks_p50": ("higher", 0.15),
+    "latency_ticks_p99": ("higher", 0.15),
+    "kv_bytes_per_token": ("higher", 0.15),
+    # NOT gated: anything wall-clock-derived. Even the AMS/fp16 speedup
+    # ratio x (machine speed divides out) swings >2x between modes of one
+    # --quick run on CPU — the workload is far too small to time reliably.
+    # Decode-throughput regressions still show: a slower schedule = more
+    # engine ticks to drain the same fixed workload.
+}
+
+
+def parse_rows(lines):
+    """'name,us_per_call,k=v k=v ...' -> {name: {k: float}} (serving rows)."""
+    rows = {}
+    for ln in lines:
+        ln = ln.strip()
+        if not ln or ln.startswith("#") or not ln.startswith("serving/"):
+            continue
+        name, _, rest = ln.split(",", 2)
+        fields = {}
+        for part in rest.split():
+            key, sep, val = part.partition("=")
+            if sep:
+                try:
+                    fields[key] = float(val)
+                except ValueError:
+                    pass
+        rows[name] = fields
+    return rows
+
+
+def check_regression(out_lines, baseline_path) -> int:
+    """Compare this run's serving rows against the committed baseline.
+    Returns the number of regressions (printed); missing rows count."""
+    with open(baseline_path) as f:
+        base = parse_rows(f)
+    cur = parse_rows(out_lines)
+    failures = []
+    for name, bfields in sorted(base.items()):
+        if name not in cur:
+            failures.append(f"{name}: row missing from this run")
+            continue
+        for metric, (direction, tol) in GATED.items():
+            if metric not in bfields:
+                continue
+            b, c = bfields[metric], cur[name].get(metric)
+            if c is None:
+                failures.append(f"{name}: metric {metric} disappeared")
+                continue
+            if direction == "higher":
+                bad = c > b * (1 + tol) + 1e-9
+            else:
+                bad = c < b * (1 - tol) - 1e-9
+            if bad:
+                failures.append(
+                    f"{name}: {metric} {b:g} -> {c:g} "
+                    f"({'+' if c > b else ''}{100 * (c - b) / b if b else 0:.0f}%, "
+                    f"tol {tol:.0%} {direction}-is-worse)")
+    for f_ in failures:
+        print(f"REGRESSION {f_}", flush=True)
+    if not failures:
+        print(f"# regression gate: {len(base)} baseline rows OK "
+              f"(vs {baseline_path})")
+    return len(failures)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer training steps for the accuracy bench")
     ap.add_argument("--skip-accuracy", action="store_true")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="compare serving rows against a committed baseline "
+                         "CSV; exit non-zero on >tolerance regressions")
+    ap.add_argument("--write-baseline", metavar="PATH",
+                    help="write this run's serving rows as the new baseline")
     args = ap.parse_args()
 
     out_lines = []
@@ -88,6 +183,24 @@ def main() -> None:
         f.write("\n".join(out_lines) + "\n")
     print(f"# done in {time.time()-t0:.0f}s "
           f"({len(out_lines)} rows -> experiments/bench_results.txt)")
+
+    if args.write_baseline:
+        serving = [ln for ln in out_lines if ln.startswith("serving/")]
+        with open(args.write_baseline, "w") as f:
+            f.write("# bench regression baseline — serving rows of a --quick "
+                    "sweep.\n# Gated metrics (see benchmarks/run.py GATED): "
+                    "ticks, ttft/latency tick\n# percentiles, "
+                    "kv_bytes_per_token — deterministic given the seed; "
+                    "15% tolerance.\n"
+                    "# Regenerate: python -m benchmarks.run --quick "
+                    "--write-baseline benchmarks/baseline.csv\n")
+            f.write("\n".join(serving) + "\n")
+        print(f"# wrote {len(serving)} serving rows -> {args.write_baseline}")
+
+    if args.check:
+        n_bad = check_regression(out_lines, args.check)
+        if n_bad:
+            sys.exit(f"{n_bad} bench regression(s) vs {args.check}")
 
 
 if __name__ == "__main__":

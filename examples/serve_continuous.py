@@ -10,6 +10,14 @@ pages (refcount += 1) and starts at the cached length. The same workload
 runs again with ``CacheConfig(prefix_cache=False)`` to show the measured
 TTFT and hit-rate delta — token streams are bit-identical either way.
 
+Requests carry PER-REQUEST SamplingParams (see docs/sampling.md): r0 and
+r3 decode greedily, r1 samples at temperature 0.9 / top-p 0.9, and r2
+samples with STOP TOKENS — it terminates mid-stream the moment one is
+drawn (finish_reason "stop"), freeing its pages and admission headroom
+the same tick. Sampled streams are seeded per request and replay
+bit-identically across both runs, so the cached-vs-cold token assert
+still holds.
+
 Pass ``--contiguous`` for the PR-1 fixed-slot cache (no paging, no prefix
 cache; each request's greedy output is then identical to running it alone;
 batch invariance, see tests/test_engine.py).
@@ -23,14 +31,24 @@ import numpy as np
 
 from repro.cache import CacheConfig
 from repro.launch.engine import ServeEngine
+from repro.launch.sampling import SamplingParams
 
 SYS_LEN = 16          # shared system prompt: two full 8-token pages
 PAGED = "--contiguous" not in sys.argv[1:]
 
-# arrival schedule: tick -> (suffix_len, max_tokens). Request 0 arrives
-# alone so its prefill publishes the shared pages before the burst at
-# tick 20+ (two slots: r3 must also queue for a free slot).
-SCHEDULE = {0: [(6, 16)], 20: [(10, 8)], 22: [(4, 12)], 24: [(8, 6)]}
+# arrival schedule: tick -> (suffix_len, SamplingParams). Request 0
+# arrives alone so its prefill publishes the shared pages before the
+# burst at tick 20+ (two slots: r3 must also queue for a free slot).
+# r1 samples stochastically; r2 carries stop tokens and ends early.
+SCHEDULE = {
+    0: [(6, SamplingParams(max_tokens=16))],                      # greedy
+    20: [(10, SamplingParams(temperature=0.9, top_p=0.9, seed=11,
+                             max_tokens=8))],
+    22: [(4, SamplingParams(temperature=0.9, top_k=64, seed=5,
+                            max_tokens=12,
+                            stop_token_ids=(402, 509, 263)))],
+    24: [(8, SamplingParams(max_tokens=6))],                      # greedy
+}
 
 
 def drive(prefix_cache: bool):
@@ -44,19 +62,23 @@ def drive(prefix_cache: bool):
     sys_prompt = rng.integers(0, eng.cfg.vocab_size, SYS_LEN)
     requests = []
     while eng.has_work or eng.tick <= max(SCHEDULE):
-        for slen, mt in SCHEDULE.get(eng.tick, []):
+        for slen, sp in SCHEDULE.get(eng.tick, []):
             prompt = np.concatenate(
                 [sys_prompt, rng.integers(0, eng.cfg.vocab_size, slen)])
-            req = eng.submit(prompt, mt)
+            req = eng.submit(prompt, sampling=sp)
             requests.append(req)
             print(f"tick {eng.tick:3d} | submit  r{req.rid} "
-                  f"(prompt {len(prompt)}, want {mt} tokens) "
-                  f"queue={eng.sched.queue_depth}")
+                  f"(prompt {len(prompt)}, cap {sp.max_tokens}, "
+                  f"T={sp.temperature:g}"
+                  + (f", {len(sp.stop_token_ids)} stop ids" if
+                     sp.stop_token_ids else "")
+                  + f") queue={eng.sched.queue_depth}")
         info = eng.step()
         for req in info["finished"]:
             print(f"tick {eng.tick - 1:3d} | finish  r{req.rid} "
                   f"slot {req.slot} (admitted t{req.admit_tick}, "
-                  f"{req.cached_len} positions from cache): {req.tokens}")
+                  f"{req.cached_len} positions from cache, "
+                  f"{req.finish_reason}): {req.tokens}")
     return requests, eng
 
 
@@ -79,7 +101,8 @@ if PAGED:
           f"from shared pages")
     print("  req   ttft(cached)   ttft(cold)   prefill skipped")
     for r, b in zip(requests, base_reqs):
-        assert r.tokens == b.tokens, "caching must not change tokens"
+        assert r.tokens == b.tokens, \
+            "caching must not change tokens (greedy OR seeded sampling)"
         print(f"  r{r.rid}   {r.ttft_ticks:12d}   {b.ttft_ticks:10d}   "
               f"{r.cached_len:15d}")
     mean = float(np.mean([r.ttft_ticks for r in requests]))

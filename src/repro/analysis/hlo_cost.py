@@ -169,10 +169,28 @@ def _fusion_operand_bytes(op: Op, idx: int, oname: str, sym, comps) -> float:
         return full
     consumers = [inner.ops[n] for n in inner.order
                  if pname in inner.ops[n].operands]
-    if consumers and all(c.kind in _SLICING for c in consumers):
-        sliced = sum(_nbytes(c.out_shapes) for c in consumers)
-        return min(full, sliced)
-    return full
+    if not consumers:
+        return full
+    reads = 0.0
+    for c in consumers:
+        if c.kind in _SLICING:
+            reads += _nbytes(c.out_shapes)
+        elif c.kind in ("fusion", "call") and c.called:
+            # some backends wrap the slice fusion in another call/fusion
+            # layer (e.g. CPU's parallel_* call wrappers) — recurse at
+            # EVERY operand position this buffer feeds (it may appear
+            # more than once), with the consumer's own index each time
+            sub_sym = {pname: inner.ops[pname].out_shapes}
+            for j, on in enumerate(c.operands):
+                if on != pname:
+                    continue
+                r = _fusion_operand_bytes(c, j, pname, sub_sym, comps)
+                if r >= full:
+                    return full
+                reads += r
+        else:
+            return full
+    return min(full, reads)
 
 
 def _inplace_update_bytes(op: Op, comps) -> Optional[Tuple[float, float]]:

@@ -45,8 +45,20 @@ Architecture (Orca-style iteration-level scheduling):
     compilation, no batch-shape churn. (``prefill_chunk=1`` — the default,
     and the only mode for recurrent-state families — degenerates to the
     original one-position-per-tick step.);
-  * sampling is greedy argmax on-device; only [B] int32s cross to the host
-    per tick, and the host decides each slot's next input.
+  * sampling is ON-DEVICE and PER-REQUEST (`repro.launch.sampling`): each
+    request carries a `SamplingParams(temperature, top_k, top_p, seed,
+    max_tokens, stop_token_ids)`; the step applies the logit transforms
+    and categorical draw from per-slot folded PRNG keys and decides
+    termination (stop-token hit or length cap) in-step, so only [B] int32
+    tokens + [B] done bools cross to the host per tick. ``temperature=0``
+    (the default) lowers to the exact argmax path, keeping every greedy
+    stream-equivalence guarantee bit-identical. Seeded streams replay
+    bit-identically across engine restarts and slot reassignment: the
+    draw key folds in the REQUEST id and the request's own token index,
+    never the slot or tick. A finished slot frees its pages (prefix pages
+    stay published per the refcount semantics above) and the queue is
+    re-polled the SAME tick, so early EOS turns directly into admission
+    headroom.
 
 Because every slot's computation is row-independent (attention hard-masks
 invalid cache positions to exact zeros), a request's token stream is
@@ -84,6 +96,14 @@ from repro.configs import get_config
 from repro.configs.base import RunConfig
 from repro.core.policy import QuantPolicy
 from repro.launch.mesh import make_driver_mesh, use_mesh
+from repro.launch.sampling import (
+    GREEDY,
+    SamplingParams,
+    clear_slot,
+    fill_slot,
+    request_key,
+    slot_batch,
+)
 from repro.launch.scheduler import FIFOScheduler, Request
 from repro.launch.steps import build_engine_step
 from repro.models import init_params, make_cache, model_dims, reset_cache_slot
@@ -147,7 +167,8 @@ class ServeEngine:
                                     cache_cfg=ccfg if ccfg.paged else None)
             self._step, _, _ = build_engine_step(
                 self.mesh, cfg, self.rcfg,
-                cache_cfg=ccfg if ccfg.paged else None, chunk=self.chunk)
+                cache_cfg=ccfg if ccfg.paged else None, chunk=self.chunk,
+                sampling=True)
             # paged pools need no per-slot reset: positions are written
             # front-to-front per request, so every valid key is fresh, and
             # recurrent-state families are rejected by check_paged_support
@@ -170,6 +191,9 @@ class ServeEngine:
         self.active: List[Optional[Request]] = [None] * slots
         self.fed = np.zeros(slots, np.int32)   # inputs consumed == insert pos
         self.last_token = np.zeros(slots, np.int32)
+        # per-slot sampling state shipped to the step each tick (key, ngen,
+        # temperature, top_k, top_p, max_tokens, stop_ids rows)
+        self.samp = slot_batch(slots)
         self.tick = 0
         self.finished: List[Request] = []
         self._rid = itertools.count()
@@ -179,10 +203,23 @@ class ServeEngine:
         self._cached_tokens = 0                # ... served from shared pages
 
     # ------------------------------------------------------------- frontend
-    def submit(self, prompt, max_tokens: int,
-               prefix_embeds=None) -> Request:
+    def submit(self, prompt, max_tokens: Optional[int] = None,
+               prefix_embeds=None,
+               sampling: Optional[SamplingParams] = None) -> Request:
         """Enqueue a request. Raises if it can never fit a cache slot.
-        (`Request.__post_init__` normalizes the prompt to [P] int32.)"""
+        (`Request.__post_init__` normalizes the prompt to [P] int32.)
+
+        ``sampling`` configures the per-request draw (temperature/top_k/
+        top_p/seed) and termination (stop_token_ids + max_tokens); omitted
+        -> greedy argmax, exactly the PR 1-4 behaviour. ``max_tokens`` is
+        the length CAP — ``sampling.max_tokens`` wins when both are given,
+        and a stop-token hit ends the stream earlier."""
+        sp = sampling if sampling is not None else GREEDY
+        if sp.max_tokens is not None:
+            max_tokens = sp.max_tokens
+        if max_tokens is None:
+            raise ValueError(
+                "max_tokens required (argument or SamplingParams.max_tokens)")
         if prefix_embeds is not None:
             prefix_embeds = np.asarray(prefix_embeds, np.float32)
             if self.cfg.num_prefix_embeds == 0:
@@ -194,8 +231,12 @@ class ServeEngine:
                 raise ValueError(
                     f"prefix_embeds must be [n, d_model={self.cfg.d_model}], "
                     f"got {prefix_embeds.shape}")
-        req = Request(rid=next(self._rid), prompt=prompt,
-                      max_tokens=max_tokens, prefix_embeds=prefix_embeds)
+        rid = next(self._rid)
+        # request-level PRNG key: seed + REQUEST id (never the slot/tick),
+        # so seeded streams replay across restarts and slot reassignment
+        req = Request(rid=rid, prompt=prompt, max_tokens=max_tokens,
+                      prefix_embeds=prefix_embeds, sampling=sp,
+                      key_data=request_key(sp.seed, rid))
         ccfg = self.cache_cfg
         if ccfg.paged and ccfg.prefix_cache and prefix_embeds is None:
             # chain hash per FULL prompt page — the prefix-cache identity
@@ -213,6 +254,67 @@ class ServeEngine:
     def active_count(self) -> int:
         return sum(r is not None for r in self.active)
 
+    # ------------------------------------------------------------ admission
+    def _admit(self) -> int:
+        """Admit queued requests into free slots; returns the count placed.
+
+        Contiguous: reset slot caches first — recurrent SSM/RG-LRU states
+        integrate garbage while a slot idles; KV entries are position-
+        masked but cleared too. Paged: reserve the request's worst-case
+        pages and publish its block-table row instead; admission is
+        additionally gated on the free-page budget via `fits`. Admission
+        is token-budget-aware: active slots never exceed the per-tick
+        budget, so every slot advances every tick.
+
+        Called at tick START and AGAIN after slots free at tick end, so an
+        early-terminating (stop-token) request's capacity becomes an
+        admission the same tick it finishes.
+        """
+        paged = self.cache_cfg.paged
+        free = [s for s, r in enumerate(self.active) if r is None]
+        room = self.token_budget - self.active_count
+        fits = None
+        if paged:
+            ps = self.cache_cfg.page_size
+
+            # cache-aware admission: the longest resident prefix of the
+            # request's page hashes is SHARED (pinned, read-only) and
+            # only the uncached page count charges the free budget.
+            # Allocation happens right here, inside the check — admit's
+            # contract (fits(head) True => head is admitted) makes the
+            # mutation safe, and it keeps the budget exact when one
+            # tick both pins cached pages and evicts cold ones.
+            def fits(r):
+                need = self.alloc.pages_needed(r.kv_need)
+                # always re-feed at least the last prompt token (its
+                # logits produce the first generated token), so the
+                # matchable prefix stops one position short of the end
+                hashes = r.page_hashes[
+                    : (r.n_prefix + r.prompt_len - 1) // ps]
+                if not self.alloc.can_alloc(need, hashes):
+                    return False
+                r.pages, shared = self.alloc.alloc(r.rid, need, hashes)
+                r.cached_len = shared * ps
+                r.published = shared
+                return True
+        placed = self.sched.admit(free, self.tick, fits=fits,
+                                  max_admit=max(0, room))
+        for slot, req in placed:
+            if paged:
+                self.block_tables[slot] = self.alloc.block_table_row(
+                    req.rid, self.block_tables.shape[1])
+                self._prompt_tokens += req.n_prefix + req.prompt_len
+                self._cached_tokens += req.cached_len
+            else:
+                self.cache = self._reset(self.cache, slot)
+            self.active[slot] = req
+            # prefill skip: cached pages already hold positions
+            # [0, cached_len), so this slot starts feeding there
+            self.fed[slot] = req.cached_len
+            fill_slot(self.samp, slot, req.sampling, req.key_data,
+                      req.max_tokens)
+        return len(placed)
+
     # ----------------------------------------------------------------- tick
     def step(self) -> Dict[str, object]:
         """One engine tick: admit, run the slot-masked ragged step, advance
@@ -224,53 +326,8 @@ class ServeEngine:
         paged = self.cache_cfg.paged
         C = self.chunk
         with use_mesh(self.mesh):
-            # 1) admit queued requests into free slots (contiguous: reset
-            #    slot caches first — recurrent SSM/RG-LRU states integrate
-            #    garbage while a slot idles; KV entries are position-masked
-            #    but cleared too. Paged: reserve the request's worst-case
-            #    pages and publish its block-table row instead; admission is
-            #    additionally gated on the free-page budget via `fits`).
-            #    Admission is token-budget-aware: active slots never exceed
-            #    the per-tick budget, so every slot advances every tick.
-            free = [s for s, r in enumerate(self.active) if r is None]
-            room = self.token_budget - self.active_count
-            fits = None
-            if paged:
-                ps = self.cache_cfg.page_size
-
-                # cache-aware admission: the longest resident prefix of the
-                # request's page hashes is SHARED (pinned, read-only) and
-                # only the uncached page count charges the free budget.
-                # Allocation happens right here, inside the check — admit's
-                # contract (fits(head) True => head is admitted) makes the
-                # mutation safe, and it keeps the budget exact when one
-                # tick both pins cached pages and evicts cold ones.
-                def fits(r):
-                    need = self.alloc.pages_needed(r.kv_need)
-                    # always re-feed at least the last prompt token (its
-                    # logits produce the first generated token), so the
-                    # matchable prefix stops one position short of the end
-                    hashes = r.page_hashes[
-                        : (r.n_prefix + r.prompt_len - 1) // ps]
-                    if not self.alloc.can_alloc(need, hashes):
-                        return False
-                    r.pages, shared = self.alloc.alloc(r.rid, need, hashes)
-                    r.cached_len = shared * ps
-                    r.published = shared
-                    return True
-            for slot, req in self.sched.admit(free, self.tick, fits=fits,
-                                              max_admit=max(0, room)):
-                if paged:
-                    self.block_tables[slot] = self.alloc.block_table_row(
-                        req.rid, self.block_tables.shape[1])
-                    self._prompt_tokens += req.n_prefix + req.prompt_len
-                    self._cached_tokens += req.cached_len
-                else:
-                    self.cache = self._reset(self.cache, slot)
-                self.active[slot] = req
-                # prefill skip: cached pages already hold positions
-                # [0, cached_len), so this slot starts feeding there
-                self.fed[slot] = req.cached_len
+            # 1) admit queued requests into free slots (see _admit)
+            self._admit()
 
             if self.active_count == 0:
                 # idle ticks still advance the engine clock — open-loop
@@ -312,6 +369,8 @@ class ServeEngine:
                 assert i >= req.cached_len, (
                     f"slot {s}: insert at {i} would write a shared page "
                     f"(cached prefix {req.cached_len})")
+                if req.first_step_tick < 0:
+                    req.first_step_tick = self.tick
                 pos[s] = i
                 for j in range(int(nvalid[s])):
                     idx = i + j
@@ -323,7 +382,9 @@ class ServeEngine:
                     else:
                         token[s, j] = self.last_token[s]
 
-            # 4) ONE jitted step for every slot (ragged when C > 1)
+            # 4) ONE jitted step for every slot (ragged when C > 1); the
+            #    per-slot sampling rows ride along as one pytree arg and
+            #    the step hands back the sampled token + in-step done flag
             if C > 1:
                 args = (self.params, jnp.asarray(token), jnp.asarray(pos),
                         jnp.asarray(nvalid), self.cache)
@@ -338,8 +399,10 @@ class ServeEngine:
                 else:
                     args += (jnp.asarray(embeds[:, 0]),
                              jnp.asarray(emask[:, 0]))
-            next_tok, self.cache = self._step(*args)
+            args += ({k: jnp.asarray(v) for k, v in self.samp.items()},)
+            next_tok, done, self.cache = self._step(*args)
             next_tok = np.asarray(next_tok)
+            done = np.asarray(done)
 
             # 5) advance slot state by consumed chunk lengths; collect
             #    sampled tokens; free finished
@@ -355,29 +418,41 @@ class ServeEngine:
                     # boundaries: content-addressed, so an identical prefix
                     # admitted later references the same physical page.
                     # Pages holding generated tokens are never published.
-                    done = min(int(self.fed[s]), req.prompt_len)
-                    while (req.published + 1) * self.cache_cfg.page_size <= done:
+                    filled = min(int(self.fed[s]), req.prompt_len)
+                    while (req.published + 1) * self.cache_cfg.page_size <= filled:
                         j = req.published
                         self.alloc.publish(req.rid, req.page_hashes[j],
                                            req.pages[j])
                         req.published = j + 1
                 if i + n - 1 >= req.n_prefix + req.prompt_len - 1:
                     # this chunk consumed the last prompt token or a generated
-                    # token -> the last valid position's argmax is the next
+                    # token -> the last valid position's draw is the next
                     # generated token
-                    req.tokens.append(int(next_tok[s]))
-                    self.last_token[s] = int(next_tok[s])
+                    tok = int(next_tok[s])
+                    req.tokens.append(tok)
+                    self.last_token[s] = tok
+                    self.samp["ngen"][s] = len(req.tokens)
                     generated += 1
                     if len(req.tokens) == 1:
                         req.first_token_tick = self.tick
-                    if len(req.tokens) >= req.max_tokens:
+                    if bool(done[s]):
+                        # in-step termination: stop-token hit or length cap
                         req.finish_tick = self.tick
+                        req.finish_reason = (
+                            "stop" if tok in req.sampling.stop_token_ids
+                            else "length")
                         self.finished.append(req)
                         finished.append(req)
                         self.active[s] = None
+                        clear_slot(self.samp, s)
                         if paged:
                             self.alloc.free(req.rid)
                             self.block_tables[s] = 0
+            # freed capacity becomes admission headroom the SAME tick: a
+            # stop-token hit admits the queue head before the tick closes
+            # (its first chunk runs next tick)
+            if finished:
+                self._admit()
         self.tick += 1
         self._tick_s.append(time.perf_counter() - t0)
         self._tick_tokens.append(generated)
@@ -428,9 +503,12 @@ class ServeEngine:
         # TTFT (submit -> first token) and end-to-end request latency, in
         # engine ticks over finished requests — TTFT is the number chunked
         # prefill moves (ceil(prompt/C) prefill ticks instead of prompt_len)
+        # requests end at VARIABLE lengths (stop tokens): both arrays are
+        # per-request actuals, so early exits shorten the percentiles
         ttft = np.asarray([r.ttft_ticks for r in self.finished
                            if r.first_token_tick >= 0], np.float64)
         e2e = np.asarray([r.latency_ticks for r in self.finished], np.float64)
+        glen = np.asarray([r.n_generated for r in self.finished], np.float64)
 
         def pct(a, q):
             return float(np.percentile(a, q)) if a.size else 0.0
@@ -450,6 +528,9 @@ class ServeEngine:
             "latency_ticks_mean": float(e2e.mean()) if e2e.size else 0.0,
             "latency_ticks_p50": pct(e2e, 50),
             "latency_ticks_p99": pct(e2e, 99),
+            "gen_tokens_mean": float(glen.mean()) if glen.size else 0.0,
+            "stopped_early": sum(r.finish_reason == "stop"
+                                 for r in self.finished),
             "queue_depth": self.sched.queue_depth,
             "kv_bytes_per_token": self.kv_bytes_per_token(),
             "kv_compression_vs_bf16": self.kv_compression_vs_bf16(),

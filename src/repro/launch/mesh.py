@@ -40,6 +40,27 @@ def use_mesh(mesh):
     return contextlib.nullcontext(mesh)
 
 
+def compat_shard_map(f, mesh, axis_names, in_specs, out_specs):
+    """`jax.shard_map` across the supported jax range.
+
+    Current jax spells it ``jax.shard_map(..., axis_names=...,
+    check_vma=...)``; 0.4.x has only ``jax.experimental.shard_map`` with
+    ``check_rep``, where the region is manual over EVERY mesh axis (its
+    partial-manual ``auto=`` mode lowers to a PartitionId op XLA's CPU
+    SPMD partitioner rejects). Axes absent from the specs are then
+    manually replicated — same math for every region in this tree (none
+    runs collectives over its auto axes), at worst extra replication on
+    0.4.x."""
+    axis_names = set(axis_names)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, axis_names=axis_names,
+                             in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

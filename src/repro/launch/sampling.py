@@ -1,0 +1,246 @@
+"""On-device stochastic sampling for the continuous-batching engine.
+
+The engine's jitted step ends in a per-slot token draw. PR 1-4 hard-coded
+greedy argmax; this module generalizes it to per-request temperature /
+top-k / top-p sampling with per-request termination (EOS / stop tokens /
+length cap) — still ON DEVICE, so the per-tick host traffic stays [B]
+int32 tokens plus a [B] done flag, never the [B, V] logits.
+
+Contracts (load-bearing — tests/test_sampling.py pins all three):
+
+  * ``temperature == 0`` IS greedy: the draw lowers to the exact
+    ``jnp.argmax`` the engine has always used (top_k/top_p are ignored at
+    temperature 0), and an all-greedy batch takes a ``lax.cond`` branch
+    that is *only* the argmax — so greedy workloads pay nothing for the
+    sampling machinery and every stream-equivalence guarantee (engine ≡
+    one-shot, chunked ≡ unchunked, prefix-cache on ≡ off) keeps holding
+    bit-identically.
+
+  * PRNG key discipline: each draw uses
+    ``fold_in(fold_in(PRNGKey(params.seed), request_id), n_generated)``.
+    The request id and the request's OWN generated-token index are the
+    only fold inputs — never the slot index, engine tick, or batch
+    neighbours — so a seeded stream replays bit-identically across engine
+    restarts, slot reassignment, different slot counts, and different
+    prefill chunking. The request-level half (``request_key``) is folded
+    once host-side at submit; the per-draw half folds in-step from the
+    slot's generated count.
+
+  * Termination is decided in-step: ``done = stop_token_hit | (n_generated
+    + 1 >= max_tokens)``. Stop ids ride a fixed-width [B, MAX_STOP] int32
+    row (padded with -1, an id no token matches); the stop token itself is
+    appended to the stream before the request finishes.
+
+Transform order per row (matching vLLM/HF conventions): scale by
+temperature, mask to top-k, mask to top-p (nucleus, computed on the
+tempered distribution), categorical draw. Ties at the k-th / nucleus
+cutoff keep every tied candidate — deterministic, and independent of sort
+stability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# fixed width of the per-slot stop-id row the jitted step consumes;
+# SamplingParams rejects longer stop sets at construction
+MAX_STOP_IDS = 8
+
+# pad value for unused stop-id lanes: no sampled token is ever negative
+_NO_STOP = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling + termination configuration.
+
+    temperature  0.0 = greedy argmax (exact; top_k/top_p ignored)
+    top_k        keep the k highest logits (0 = disabled)
+    top_p        nucleus: keep the smallest prefix of the sorted
+                 distribution with cumulative mass >= top_p (1.0 = off)
+    seed         request-level PRNG seed (folded with the request id)
+    max_tokens   length cap; None = resolved from the submit() argument
+    stop_token_ids  sampling one of these ends the request (EOS lives
+                 here); the stop token is included in the output stream
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    max_tokens: Optional[int] = None
+    stop_token_ids: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.max_tokens is not None and self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        ids = tuple(int(t) for t in self.stop_token_ids)
+        if len(ids) > MAX_STOP_IDS:
+            raise ValueError(
+                f"at most {MAX_STOP_IDS} stop_token_ids supported, got {len(ids)}")
+        if any(t < 0 for t in ids):
+            raise ValueError(f"stop_token_ids must be non-negative, got {ids}")
+        object.__setattr__(self, "stop_token_ids", ids)
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def request_key(seed: int, rid: int) -> np.ndarray:
+    """Host-side request-level key: fold_in(PRNGKey(seed), rid) as raw
+    uint32[2] data. Computed once at submit; the per-draw fold happens
+    in-step from the generated-token count."""
+    return np.asarray(
+        jax.random.fold_in(jax.random.PRNGKey(seed), rid), np.uint32)
+
+
+def slot_batch(n_slots: int) -> dict:
+    """The host-side per-slot sampling state the engine maintains and
+    ships to the step each tick (one pytree arg). Idle-slot rows are
+    harmless defaults (greedy, never-stopping, zero key)."""
+    return {
+        "key": np.zeros((n_slots, 2), np.uint32),
+        "ngen": np.zeros(n_slots, np.int32),
+        "temperature": np.zeros(n_slots, np.float32),
+        "top_k": np.zeros(n_slots, np.int32),
+        "top_p": np.ones(n_slots, np.float32),
+        "max_tokens": np.full(n_slots, np.iinfo(np.int32).max, np.int32),
+        "stop_ids": np.full((n_slots, MAX_STOP_IDS), _NO_STOP, np.int32),
+    }
+
+
+def fill_slot(batch: dict, slot: int, params: SamplingParams,
+              key_data: np.ndarray, max_tokens: int) -> None:
+    """Write one request's resolved sampling state into its slot row."""
+    batch["key"][slot] = key_data
+    batch["ngen"][slot] = 0
+    batch["temperature"][slot] = params.temperature
+    batch["top_k"][slot] = params.top_k
+    batch["top_p"][slot] = params.top_p
+    batch["max_tokens"][slot] = max_tokens
+    batch["stop_ids"][slot] = _NO_STOP
+    if params.stop_token_ids:
+        batch["stop_ids"][slot, :len(params.stop_token_ids)] = \
+            params.stop_token_ids
+
+
+def clear_slot(batch: dict, slot: int) -> None:
+    """Reset a freed slot row to the idle defaults."""
+    batch["key"][slot] = 0
+    batch["ngen"][slot] = 0
+    batch["temperature"][slot] = 0.0
+    batch["top_k"][slot] = 0
+    batch["top_p"][slot] = 1.0
+    batch["max_tokens"][slot] = np.iinfo(np.int32).max
+    batch["stop_ids"][slot] = _NO_STOP
+
+
+def batch_shapes(n_slots: int) -> dict:
+    """Abstract shapes of the step's sampling pytree arg (dry-run/AOT)."""
+    return {
+        k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+        for k, v in slot_batch(n_slots).items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# device-side transforms
+# ---------------------------------------------------------------------------
+def _mask_top_k(logits, k):
+    """REFERENCE top-k mask: keep the k highest logits (ties at the cutoff
+    included); k <= 0 disables. Per-row, [V] -> [V] with dropped entries
+    at -inf. The hot path is `_masked_logits` (one shared sort); unit
+    tests pin both and their equivalence."""
+    v = logits.shape[-1]
+    sorted_desc = jnp.sort(logits)[::-1]
+    kth = sorted_desc[jnp.clip(k, 1, v) - 1]
+    kth = jnp.where(k > 0, kth, -jnp.inf)
+    return jnp.where(logits >= kth, logits, -jnp.inf)
+
+
+def _mask_top_p(logits, p):
+    """REFERENCE nucleus mask: keep the smallest prefix of the descending-
+    sorted distribution whose cumulative probability reaches p (the top
+    token always survives; ties at the cutoff included). p >= 1 disables."""
+    sorted_desc = jnp.sort(logits)[::-1]
+    probs = jax.nn.softmax(sorted_desc)
+    csum = jnp.cumsum(probs)
+    # position i survives iff the mass strictly before it is < p
+    keep = (csum - probs) < p
+    n_keep = jnp.maximum(jnp.sum(keep), 1)
+    cutoff = sorted_desc[n_keep - 1]
+    cutoff = jnp.where(p >= 1.0, -jnp.inf, cutoff)
+    return jnp.where(logits >= cutoff, logits, -jnp.inf)
+
+
+def _masked_logits(scaled, top_k, top_p):
+    """Fused top-k + top-p mask from ONE descending sort.
+
+    Both transforms are >=-threshold masks on the same values, so their
+    composition is a mask at max(top-k cutoff, top-p cutoff); computing
+    the nucleus on the k-prefix of the shared sorted row matches
+    `_mask_top_p(_mask_top_k(x))` exactly (the survivors of top-k are a
+    prefix of the descending sort). One O(V log V) sort per sampled row
+    instead of two — this runs per slot per tick on the decode hot path."""
+    v = scaled.shape[-1]
+    pos = jnp.arange(v)
+    sorted_desc = jnp.sort(scaled)[::-1]
+    kth = sorted_desc[jnp.clip(top_k, 1, v) - 1]
+    kth = jnp.where(top_k > 0, kth, -jnp.inf)
+    n_k = jnp.sum(sorted_desc >= kth)          # k-prefix length (ties incl.)
+    probs = jax.nn.softmax(jnp.where(pos < n_k, sorted_desc, -jnp.inf))
+    csum = jnp.cumsum(probs)
+    keep = (csum - probs) < top_p              # mass strictly before i < p
+    n_keep = jnp.maximum(jnp.sum(keep), 1)
+    p_cut = jnp.where(top_p >= 1.0, -jnp.inf, sorted_desc[n_keep - 1])
+    return jnp.where(scaled >= jnp.maximum(kth, p_cut), scaled, -jnp.inf)
+
+
+def _sample_row(logits, key, temperature, top_k, top_p):
+    """One slot's draw: tempered + masked categorical, with an exact
+    argmax override at temperature 0 (transforms skipped entirely)."""
+    greedy_tok = jnp.argmax(logits)
+    safe_t = jnp.where(temperature > 0, temperature, 1.0)
+    scaled = logits.astype(jnp.float32) / safe_t
+    sampled = jax.random.categorical(key, _masked_logits(scaled, top_k, top_p))
+    return jnp.where(temperature > 0, sampled, greedy_tok).astype(jnp.int32)
+
+
+def sample_tokens(logits, sampling: dict):
+    """The step's epilogue: per-slot token draw + in-step termination.
+
+    logits: [B, V] (any float dtype); sampling: the `slot_batch` pytree
+    (device arrays under jit). Returns (next_token [B] int32, done [B]
+    bool). An all-greedy batch short-circuits to pure argmax via lax.cond,
+    so greedy ticks never execute the sort-heavy masking path.
+    """
+    def draw_greedy(lg):
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    def draw_sampled(lg):
+        keys = jax.vmap(jax.random.fold_in)(sampling["key"], sampling["ngen"])
+        return jax.vmap(_sample_row)(
+            lg, keys, sampling["temperature"], sampling["top_k"],
+            sampling["top_p"])
+
+    all_greedy = jnp.all(sampling["temperature"] <= 0.0)
+    next_token = jax.lax.cond(all_greedy, draw_greedy, draw_sampled, logits)
+    stop_hit = jnp.any(
+        next_token[:, None] == sampling["stop_ids"], axis=-1)
+    length_hit = sampling["ngen"] + 1 >= sampling["max_tokens"]
+    return next_token, stop_hit | length_hit

@@ -29,6 +29,8 @@ from typing import Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
+from repro.launch.sampling import GREEDY, SamplingParams
+
 
 @dataclasses.dataclass
 class Request:
@@ -36,14 +38,26 @@ class Request:
 
     rid: int
     prompt: np.ndarray                    # [P] int32 token ids
-    max_tokens: int                       # tokens to generate (greedy)
+    max_tokens: int                       # length CAP (stop tokens may end
+    #                                       the stream earlier)
     prefix_embeds: Optional[np.ndarray] = None  # [n_prefix, D] f32 (VLM/audio)
+    sampling: SamplingParams = GREEDY     # per-request sampling config
+    key_data: Optional[np.ndarray] = None  # uint32[2] request-level PRNG key
+    #                                        (fold_in(PRNGKey(seed), rid);
+    #                                        engine-filled at submit)
 
-    # lifecycle, filled by the scheduler/engine (tick = engine step index)
+    # lifecycle, filled by the scheduler/engine (tick = engine step index).
+    # admit_tick can precede the first served tick by one: a slot freed by
+    # an early-terminating request re-admits the SAME tick it frees (after
+    # that tick's step already ran), so the admitted request's first chunk
+    # runs at admit_tick + 1 — `first_step_tick` records the tick that
+    # actually served it.
     submit_tick: int = -1
     admit_tick: int = -1
+    first_step_tick: int = -1             # first tick whose step served us
     first_token_tick: int = -1            # tick that produced tokens[0]
     finish_tick: int = -1
+    finish_reason: str = ""               # "stop" (EOS/stop id) | "length"
     slot: int = -1
     tokens: List[int] = dataclasses.field(default_factory=list)
     pages: List[int] = dataclasses.field(default_factory=list)  # paged mode
@@ -69,9 +83,15 @@ class Request:
 
     @property
     def kv_need(self) -> int:
-        """Cache positions this request writes: every fed input inserts one
-        KV entry; the last generated token is never fed back."""
+        """WORST-CASE cache positions this request writes: every fed input
+        inserts one KV entry; the last generated token is never fed back.
+        Admission reserves this; a stop-token hit frees the unused tail
+        early (the request ends before the length cap)."""
         return self.n_prefix + self.prompt_len + self.max_tokens - 1
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
 
     @property
     def done(self) -> bool:
@@ -85,6 +105,17 @@ class Request:
         if self.first_token_tick < 0:
             return -1
         return self.first_token_tick - self.submit_tick
+
+    @property
+    def prefill_ticks(self) -> int:
+        """Ticks spent consuming the (uncached) prompt before the first
+        generated token: ceil(uncached_prompt / chunk) by construction.
+        Computed from the first SERVED tick, so it is invariant to whether
+        admission happened at tick start or in the same-tick post-finish
+        pass (-1 before the first token)."""
+        if self.first_token_tick < 0:
+            return -1
+        return self.first_token_tick - self.first_step_tick + 1
 
     @property
     def latency_ticks(self) -> int:

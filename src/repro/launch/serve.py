@@ -33,12 +33,18 @@ from repro.launch.engine import ServeEngine
 def generate(arch: str, *, reduced=True, scheme="fp5.33-e2m3",
              strategy="set_lsb", impl="ref", mesh_kind="none",
              batch=2, prompt_len=16, gen_tokens=16, seed=0,
-             params=None, capacity=None, prompts=None, prefix_embeds=None):
+             params=None, capacity=None, prompts=None, prefix_embeds=None,
+             sampling=None):
     """One-shot batched generation via the continuous-batching engine.
 
     Submits ``batch`` requests at tick 0 (prompts drawn from ``seed`` unless
     given explicitly as ``prompts`` [batch, prompt_len]) and drains the
     engine. Returns (tokens [batch, gen_tokens], stats).
+
+    ``sampling`` (a `repro.launch.sampling.SamplingParams`, or one per
+    request) turns on per-request stochastic decoding; stop tokens can then
+    end streams early, so the token array is padded with -1 past each
+    stream's end. Default is greedy, bit-identical to earlier PRs.
     """
     cfg = get_config(arch)
     if reduced:
@@ -57,12 +63,19 @@ def generate(arch: str, *, reduced=True, scheme="fp5.33-e2m3",
     eng = ServeEngine(arch, reduced=reduced, scheme=scheme, strategy=strategy,
                       impl=impl, mesh_kind=mesh_kind, slots=batch,
                       capacity=cap, seed=seed, params=params, verbose=True)
+    per_req = (sampling if isinstance(sampling, (list, tuple))
+               else [sampling] * prompts.shape[0])
     reqs = [eng.submit(prompts[b], gen_tokens,
                        prefix_embeds=(prefix_embeds[b]
-                                      if prefix_embeds is not None else None))
+                                      if prefix_embeds is not None else None),
+                       sampling=per_req[b])
             for b in range(prompts.shape[0])]
     stats = eng.run()
-    toks = np.stack([np.asarray(r.tokens, np.int32) for r in reqs])
+    # stop tokens make streams ragged; pad the tail with -1 (never a token)
+    width = max(r.n_generated for r in reqs)
+    toks = np.full((len(reqs), width), -1, np.int32)
+    for b, r in enumerate(reqs):
+        toks[b, :r.n_generated] = r.tokens
     return toks, stats
 
 
@@ -77,12 +90,23 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (default); >0 samples on-device")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--sample-seed", type=int, default=0)
     args = ap.parse_args()
+    sampling = None
+    if args.temperature > 0:
+        from repro.launch.sampling import SamplingParams
+        sampling = SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p,
+                                  seed=args.sample_seed)
     toks, stats = generate(args.arch, reduced=args.reduced,
                            scheme=args.scheme, strategy=args.strategy,
                            impl=args.impl, mesh_kind=args.mesh,
                            batch=args.batch, prompt_len=args.prompt,
-                           gen_tokens=args.tokens)
+                           gen_tokens=args.tokens, sampling=sampling)
     print("generated tokens:\n", toks)
     print("stats:", stats)
 

@@ -35,7 +35,7 @@ from repro.optim import (
     warmup_cosine,
 )
 from . import sharding as SH
-from .mesh import dp_axes, tp_axis
+from .mesh import compat_shard_map, dp_axes, tp_axis
 
 
 # ---------------------------------------------------------------------------
@@ -134,9 +134,10 @@ def build_train_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
         g_specs = jax.tree.map(lambda _: P(), p_bf16)
         data_spec = P(None, "pod", None)
         pre_spec = P(None, "pod", None, None)
-        f = jax.shard_map(inner, mesh=mesh, axis_names={"pod"},
-                          in_specs=(p_specs, data_spec, data_spec, pre_spec),
-                          out_specs=(g_specs, P()), check_vma=False)
+        f = compat_shard_map(
+            inner, mesh, {"pod"},
+            in_specs=(p_specs, data_spec, data_spec, pre_spec),
+            out_specs=(g_specs, P()))
         return f(p_bf16, tok_m, tgt_m, pre_m)
 
     def step_fn(params, opt_state, tokens, targets, prefix, step):
@@ -283,7 +284,8 @@ def build_serve_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
 
 
 def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
-                      cache_cfg=None, chunk: int = 1):
+                      cache_cfg=None, chunk: int = 1,
+                      sampling: bool = False):
     """Slot-masked decode step for the continuous-batching engine.
 
     One tick serves every slot of the fixed-capacity KV cache at its OWN
@@ -301,12 +303,25 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
     per-slot valid length; logits are taken in-step at each slot's last
     valid token. Pure-attention families only (`check_chunked_support`).
 
-    Greedy sampling (argmax) runs on-device so each tick moves only [B]
-    int32s back to the host scheduler.
+    SAMPLING (``sampling=True``): the step's epilogue becomes the
+    per-slot stochastic draw of `repro.launch.sampling` — temperature /
+    top-k / top-p transforms and the categorical draw run ON DEVICE from
+    per-slot folded PRNG keys, and termination (stop-token hit or length
+    cap) is decided in-step. The step then takes one extra pytree arg
+    ``sampling`` (see `sampling.slot_batch`: per-slot key/ngen/
+    temperature/top_k/top_p/max_tokens/stop_ids rows) after the last
+    positional input, and returns an extra [B] bool ``done`` flag. An
+    all-greedy batch lowers to the exact argmax path via lax.cond, so
+    greedy ticks are bit-identical to (and as cheap as) the
+    ``sampling=False`` step. Per tick only [B] int32 tokens + [B] bools
+    cross back to the host.
+
+    Without sampling, greedy argmax runs on-device so each tick moves only
+    [B] int32s back to the host scheduler.
 
     step(params, token [B] | [B, C], pos [B][, nvalid [B]], cache
-         [, block_tables [B, MP]][, embeds, embed_mask])
-        -> (next_token [B], cache)
+         [, block_tables [B, MP]][, embeds, embed_mask][, sampling])
+        -> (next_token [B][, done [B]], cache)
 
     The embeds override exists only when the config has a modality frontend
     (``num_prefix_embeds > 0``): prefix embeddings stream through the same
@@ -338,11 +353,15 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
         check_chunked_support(cfg)
 
     def core(params, token, pos, cache, block_tables=None, embeds=None,
-             embed_mask=None, nvalid=None):
+             embed_mask=None, nvalid=None, samp=None):
         logits, cache = decode_step(
             params, token, cache, pos, cfg, tp=ctx.tp, policy=policy,
             ctx=ctx, dtype=jnp.bfloat16, embeds=embeds, embed_mask=embed_mask,
             block_tables=block_tables, cache_cfg=cache_cfg, nvalid=nvalid)
+        if samp is not None:
+            from repro.launch.sampling import sample_tokens
+            next_token, done = sample_tokens(logits, samp)
+            return next_token, done, cache
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
     pshape = quantized_param_shapes(cfg, rcfg, ctx.tp)
@@ -363,18 +382,22 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
     # mis-threaded in one branch only
     arg_names = (["token", "pos"] + (["nvalid"] if chunked else [])
                  + ["cache"] + (["block_tables"] if paged else [])
-                 + (["embeds", "embed_mask"] if has_prefix else []))
+                 + (["embeds", "embed_mask"] if has_prefix else [])
+                 + (["sampling"] if sampling else []))
 
     def engine_fn(params, *args):
         kw = dict(zip(arg_names, args))
         return core(params, kw["token"], kw["pos"], kw["cache"],
                     kw.get("block_tables"), kw.get("embeds"),
-                    kw.get("embed_mask"), kw.get("nvalid"))
+                    kw.get("embed_mask"), kw.get("nvalid"),
+                    kw.get("sampling"))
 
     in_shardings = (p_shard,) + tuple(
         c_shard if n == "cache" else None for n in arg_names)
+    out_shardings = ((tok_shard, tok_shard, c_shard) if sampling
+                     else (tok_shard, c_shard))
     jitted = jax.jit(engine_fn, in_shardings=in_shardings,
-                     out_shardings=(tok_shard, c_shard),
+                     out_shardings=out_shardings,
                      donate_argnums=(1 + arg_names.index("cache"),))
     # arg_shapes preserves the jitted signature's POSITIONAL order — the
     # dry-run lowers via `jitted.lower(*arg_shapes.values())`
@@ -396,6 +419,9 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
         msk_shape = (B, chunk) if chunked else (B,)
         arg_shapes["embeds"] = jax.ShapeDtypeStruct(emb_shape, jnp.float32)
         arg_shapes["embed_mask"] = jax.ShapeDtypeStruct(msk_shape, jnp.bool_)
+    if sampling:
+        from repro.launch.sampling import batch_shapes
+        arg_shapes["sampling"] = batch_shapes(B)
     shardings = dict(params=p_shard, token=tok_shard, pos=tok_shard,
                      cache=c_shard)
     if chunked:

@@ -33,16 +33,12 @@ class ParallelCtx:
         return self.dp_axes if self.dp_axes else None
 
     def shard_map(self, f, in_specs, out_specs):
-        """Manual collectives over the tp axis only; other axes stay auto."""
+        """Manual collectives over the tp axis only; other axes stay auto
+        (`launch.mesh.compat_shard_map` picks the jax spelling)."""
         assert self.mesh is not None and self.tp_axis is not None
-        if hasattr(jax, "shard_map"):
-            return jax.shard_map(f, mesh=self.mesh, axis_names={self.tp_axis},
-                                 in_specs=in_specs, out_specs=out_specs,
-                                 check_vma=False)
-        # jax 0.4.x spelling (no axis_names / check_vma)
-        from jax.experimental.shard_map import shard_map as _shard_map
-        return _shard_map(f, mesh=self.mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_rep=False)
+        from repro.launch.mesh import compat_shard_map
+        return compat_shard_map(f, self.mesh, {self.tp_axis},
+                                in_specs=in_specs, out_specs=out_specs)
 
 
 NO_CTX = ParallelCtx()

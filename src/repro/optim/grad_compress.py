@@ -40,7 +40,10 @@ def compressed_psum(grads, axes: Sequence[str]):
     def world():
         n = 1
         for a in axes:
-            n *= jax.lax.axis_size(a)
+            # jax.lax.axis_size is missing on 0.4.x; psum(1, axis) is the
+            # portable spelling (constant-folded under manual axes)
+            n *= (jax.lax.axis_size(a) if hasattr(jax.lax, "axis_size")
+                  else jax.lax.psum(1, a))
         return n
 
     w = world()
@@ -65,8 +68,8 @@ def compressed_psum(grads, axes: Sequence[str]):
 
 def compressed_allreduce(grads, mesh, dp_axes: Sequence[str]):
     """Standalone wrapper: all-reduce replicated-view grads over dp_axes."""
+    from repro.launch.mesh import compat_shard_map
     specs = jax.tree.map(lambda _: P(), grads)
-    f = jax.shard_map(lambda g: compressed_psum(g, dp_axes), mesh=mesh,
-                      axis_names=set(dp_axes), in_specs=(specs,),
-                      out_specs=specs, check_vma=False)
+    f = compat_shard_map(lambda g: compressed_psum(g, dp_axes), mesh,
+                         set(dp_axes), in_specs=(specs,), out_specs=specs)
     return f(grads)

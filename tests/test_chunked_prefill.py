@@ -75,7 +75,7 @@ def baseline_streams(workload):
     for mode in CACHE_CFGS:
         reqs = drive(engine(mode), workload)
         out[mode] = ([np.asarray(r.tokens) for r in reqs],
-                     [r.first_token_tick - r.admit_tick + 1 for r in reqs])
+                     [r.prefill_ticks for r in reqs])
     return out
 
 
@@ -93,7 +93,7 @@ def test_chunked_stream_identical_to_one_token(mode, chunk, workload,
         np.testing.assert_array_equal(
             np.asarray(r.tokens), base_toks[j],
             err_msg=f"{mode} C={chunk}: request {j} diverged")
-    pf = [r.first_token_tick - r.admit_tick + 1 for r in reqs]
+    pf = [r.prefill_ticks for r in reqs]
     for j, (b, c) in enumerate(zip(base_pf, pf)):
         # one-token engine: prompt_len prefill ticks; ragged: ceil(len/C)
         assert c == -(-b // chunk), (mode, chunk, j, b, c)
@@ -111,8 +111,7 @@ def test_prefill_ticks_drop_4x_and_ttft_reported():
     r1 = ch.submit(prompt, 4)
     ch.run()
     np.testing.assert_array_equal(np.asarray(r0.tokens), np.asarray(r1.tokens))
-    pf0 = r0.first_token_tick - r0.admit_tick + 1
-    pf1 = r1.first_token_tick - r1.admit_tick + 1
+    pf0, pf1 = r0.prefill_ticks, r1.prefill_ticks
     assert pf0 == 24 and pf1 == 3           # ceil(24/8): 8x fewer
     assert pf0 >= 4 * pf1
     s = ch.stats()
@@ -139,7 +138,7 @@ def test_decode_advances_every_tick_during_long_prefill():
     eng.run()
     assert dec.done and long.done
     # the long prompt really chunked (3 prefill ticks, not 24)
-    assert long.first_token_tick - long.admit_tick + 1 == 3
+    assert long.prefill_ticks == 3
 
 
 def test_token_budget_throttles_chunks_not_liveness():
@@ -162,7 +161,7 @@ def test_token_budget_throttles_chunks_not_liveness():
     mid.run()
     np.testing.assert_array_equal(np.asarray(b0.tokens), np.asarray(m0.tokens))
     # sole active slot: 1 guaranteed + 3 leftover = 4-token chunks
-    assert m0.first_token_tick - m0.admit_tick + 1 == 4   # ceil(16/4)
+    assert m0.prefill_ticks == 4   # ceil(16/4)
 
 
 def test_admit_is_token_budget_aware():

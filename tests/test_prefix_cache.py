@@ -75,8 +75,7 @@ def _pinned_run(kind, chunk):
     assert r_on[0].cached_len == 0
     for a, b in zip(r_on[1:], r_off[1:]):
         assert a.cached_len == PREFIX
-        pf_on = a.first_token_tick - a.admit_tick + 1
-        pf_off = b.first_token_tick - b.admit_tick + 1
+        pf_on, pf_off = a.prefill_ticks, b.prefill_ticks
         assert pf_on == -(-(a.prompt_len - PREFIX) // chunk)
         assert pf_on < pf_off and a.ttft_ticks < b.ttft_ticks
     # refcounts drained: nothing referenced once the engine is empty

@@ -1,0 +1,273 @@
+"""On-device sampling through the ragged engine step.
+
+Pins the three contracts of `repro.launch.sampling`:
+
+  * temperature=0 IS greedy — bit-identical to the argmax streams of the
+    sampling-free engine across contiguous / paged_bf16 / paged_ams and
+    chunk sizes, even with top_k/top_p set (ignored at temperature 0);
+  * seeded stochastic streams replay bit-identically across engine
+    restarts, slot counts (slot reassignment) and prefill chunking — the
+    draw key folds in the request id and token index, never the slot;
+  * in-step termination: a stop-token hit ends the request mid-stream,
+    frees its pages (refcounts drain), admits the queue head the SAME
+    tick, and stats() percentiles reflect the actual shorter lengths.
+
+Plus numpy-reference unit tests of the top-k / top-p logit transforms.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import CacheConfig
+from repro.launch.engine import ServeEngine
+from repro.launch.sampling import (
+    MAX_STOP_IDS,
+    SamplingParams,
+    _mask_top_k,
+    _mask_top_p,
+    _masked_logits,
+    sample_tokens,
+    slot_batch,
+)
+
+ARCH = "qwen2-7b"
+SCHEME = "fp5.33-e2m3"
+CAP = 32
+
+CACHE_CFGS = {
+    "contiguous": None,
+    "paged_bf16": CacheConfig(kind="paged_bf16", page_size=8),
+    "paged_ams": CacheConfig(kind="paged_ams", page_size=8),
+}
+
+
+def engine(mode="contiguous", slots=2, chunk=1):
+    return ServeEngine(ARCH, scheme=SCHEME, slots=slots, capacity=CAP,
+                       seed=0, prefill_chunk=chunk,
+                       cache_config=CACHE_CFGS[mode])
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(11)
+    return [rng.integers(0, 512, n) for n in (5, 9, 12)]
+
+
+def run_all(eng, prompts, sampling):
+    reqs = [eng.submit(p, 6, sampling=s)
+            for p, s in zip(prompts, sampling)]
+    eng.run()
+    assert all(r.done for r in reqs)
+    return [list(r.tokens) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# transform unit tests (numpy reference)
+# ---------------------------------------------------------------------------
+def test_top_k_mask_matches_numpy():
+    rng = np.random.default_rng(0)
+    logits = rng.standard_normal(64).astype(np.float32)
+    for k in (1, 3, 17, 64, 200):
+        out = np.asarray(_mask_top_k(jnp.asarray(logits), jnp.int32(k)))
+        kept = np.isfinite(out)
+        thresh = np.sort(logits)[::-1][min(k, 64) - 1]
+        np.testing.assert_array_equal(kept, logits >= thresh)
+        np.testing.assert_array_equal(out[kept], logits[kept])
+    # k = 0 disables
+    out = np.asarray(_mask_top_k(jnp.asarray(logits), jnp.int32(0)))
+    np.testing.assert_array_equal(out, logits)
+
+
+def test_top_p_mask_matches_numpy():
+    rng = np.random.default_rng(1)
+    logits = rng.standard_normal(64).astype(np.float32)
+    order = np.argsort(logits)[::-1]
+    probs = np.exp(logits - logits.max())
+    probs /= probs.sum()
+    for p in (0.1, 0.5, 0.9):
+        out = np.asarray(_mask_top_p(jnp.asarray(logits), jnp.float32(p)))
+        kept = np.isfinite(out)
+        csum = np.cumsum(probs[order])
+        n_keep = int(np.sum((csum - probs[order]) < p))
+        np.testing.assert_array_equal(
+            kept, logits >= logits[order[n_keep - 1]],
+            err_msg=f"top_p={p}")
+    # the top token always survives, even at tiny p
+    out = np.asarray(_mask_top_p(jnp.asarray(logits), jnp.float32(1e-6)))
+    assert np.isfinite(out[np.argmax(logits)])
+    assert np.sum(np.isfinite(out)) == 1
+    # p = 1 disables
+    out = np.asarray(_mask_top_p(jnp.asarray(logits), jnp.float32(1.0)))
+    np.testing.assert_array_equal(out, logits)
+
+
+def test_fused_mask_matches_reference_composition():
+    """The hot path's single-sort fused mask == _mask_top_p(_mask_top_k)
+    bit for bit, across enabled/disabled combinations and tie rows."""
+    rng = np.random.default_rng(3)
+    rows = [rng.standard_normal(64).astype(np.float32),
+            np.zeros(64, np.float32),                       # all ties
+            np.repeat(rng.standard_normal(16), 4).astype(np.float32)]
+    for row in rows:
+        x = jnp.asarray(row)
+        for k in (0, 1, 5, 64):
+            for p in (1.0, 0.9, 0.3, 1e-6):
+                ref = _mask_top_p(_mask_top_k(x, jnp.int32(k)),
+                                  jnp.float32(p))
+                fused = _masked_logits(x, jnp.int32(k), jnp.float32(p))
+                np.testing.assert_array_equal(
+                    np.asarray(fused), np.asarray(ref),
+                    err_msg=f"k={k} p={p}")
+
+
+def test_sample_tokens_greedy_rows_are_argmax():
+    """Mixed batch: temperature-0 rows must be EXACT argmax even with
+    top_k/top_p set; sampled rows draw from the masked distribution."""
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.standard_normal((4, 32)).astype(np.float32))
+    samp = slot_batch(4)
+    samp["temperature"][:] = [0.0, 0.7, 0.0, 1.3]
+    samp["top_k"][:] = 5
+    samp["top_p"][:] = 0.9
+    samp["key"][:] = np.asarray(jax.random.PRNGKey(3), np.uint32)
+    samp["max_tokens"][:] = 100
+    tok, done = jax.jit(sample_tokens)(
+        logits, {k: jnp.asarray(v) for k, v in samp.items()})
+    tok = np.asarray(tok)
+    greedy = np.argmax(np.asarray(logits), axis=-1)
+    np.testing.assert_array_equal(tok[[0, 2]], greedy[[0, 2]])
+    # sampled rows stay inside the top-5 mask
+    for b in (1, 3):
+        top5 = np.sort(np.asarray(logits)[b])[::-1][4]
+        assert np.asarray(logits)[b, tok[b]] >= top5
+    assert not np.asarray(done).any()
+
+
+def test_sample_tokens_done_flag():
+    logits = jnp.zeros((3, 8), jnp.float32)
+    samp = slot_batch(3)
+    samp["max_tokens"][:] = [1, 5, 5]          # row 0 hits the length cap
+    samp["stop_ids"][1, 0] = 0                 # row 1 stops on argmax token 0
+    tok, done = sample_tokens(
+        logits, {k: jnp.asarray(v) for k, v in samp.items()})
+    np.testing.assert_array_equal(np.asarray(done), [True, True, False])
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError, match="stop_token_ids"):
+        SamplingParams(stop_token_ids=(-3,))
+    with pytest.raises(ValueError, match="max_tokens"):
+        SamplingParams(max_tokens=0)
+    with pytest.raises(ValueError, match="stop_token_ids"):
+        SamplingParams(stop_token_ids=tuple(range(MAX_STOP_IDS + 1)))
+
+
+# ---------------------------------------------------------------------------
+# temperature=0 == greedy, across the cache-mode x chunk grid
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", list(CACHE_CFGS))
+@pytest.mark.parametrize("chunk", [1, 4])
+def test_temp0_pinned_to_greedy(mode, chunk, prompts):
+    """Explicit SamplingParams(temperature=0, top_k/top_p set) streams are
+    bit-identical to the default greedy path in every cache mode and chunk
+    size — the sampling machinery must be invisible at temperature 0."""
+    greedy = run_all(engine(mode, chunk=chunk), prompts, [None] * 3)
+    explicit = run_all(
+        engine(mode, chunk=chunk), prompts,
+        [SamplingParams(temperature=0.0, top_k=5, top_p=0.5, seed=b)
+         for b in range(3)])
+    assert greedy == explicit
+
+
+# ---------------------------------------------------------------------------
+# seeded replay across restarts / slot reassignment / chunking
+# ---------------------------------------------------------------------------
+def test_seeded_replay_across_restarts_and_slots(prompts):
+    """The same seeded top-p/top-k workload replays bit-identically on a
+    fresh engine instance, with a different slot count (different slot
+    assignment + tick interleaving) and different prefill chunking."""
+    sp = [SamplingParams(temperature=0.8, top_k=40, top_p=0.9, seed=s)
+          for s in (3, 3, 9)]   # two requests SHARE a seed: rid fold splits
+    base = run_all(engine(slots=2), prompts, sp)
+    assert base != run_all(engine(slots=2), prompts,
+                           [None] * 3), "sampled != greedy sanity"
+    # restart: fresh engine, same workload
+    assert base == run_all(engine(slots=2), prompts, sp)
+    # slot reassignment: serialized through one slot / all-parallel
+    assert base == run_all(engine(slots=1), prompts, sp)
+    assert base == run_all(engine(slots=3), prompts, sp)
+    # ragged chunked prefill
+    assert base == run_all(engine(slots=2, chunk=4), prompts, sp)
+    # same-seed requests must still diverge (request id is folded in)
+    assert base[0] != base[1]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["paged_bf16", "paged_ams"])
+def test_seeded_replay_paged(mode, prompts):
+    sp = [SamplingParams(temperature=1.0, top_p=0.9, seed=s)
+          for s in (1, 2, 3)]
+    a = run_all(engine(mode, slots=2), prompts, sp)
+    b = run_all(engine(mode, slots=1, chunk=4), prompts, sp)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# early termination
+# ---------------------------------------------------------------------------
+def test_stop_token_ends_stream_and_frees_pages(prompts):
+    """EOS mid-stream: the stream ends AT the stop token, the slot's pages
+    free (refcounts drain to zero), a queued request admits the SAME tick,
+    and stats() latency percentiles reflect the actual shorter lengths."""
+    # greedy reference run picks the stop id: the 3rd generated token
+    ref = run_all(engine("paged_ams", slots=1), prompts, [None] * 3)
+    stop = ref[0][2]
+
+    eng = engine("paged_ams", slots=1)
+    r1 = eng.submit(prompts[0], sampling=SamplingParams(
+        max_tokens=6, stop_token_ids=(stop,)))
+    r2 = eng.submit(prompts[1], 6)
+    eng.run()
+
+    assert r1.tokens == ref[0][:3], "stream must end AT the stop token"
+    assert r1.finish_reason == "stop" and r2.finish_reason == "length"
+    # freed capacity became admission headroom the same tick
+    assert r2.admit_tick == r1.finish_tick
+    s = eng.stats()
+    assert s["pages_in_use"] == 0, "refcounts must drain to zero"
+    assert s["stopped_early"] == 1
+    # latency/ttft percentiles come from ACTUAL lengths: r1 finished ~3
+    # generated tokens earlier than its cap
+    assert s["gen_tokens_mean"] == pytest.approx((3 + 6) / 2)
+    assert r1.latency_ticks < r2.latency_ticks
+    assert s["latency_ticks_p50"] <= s["latency_ticks_p99"]
+    assert s["requests_finished"] == 2
+
+
+def test_stop_token_in_contiguous_mode(prompts):
+    ref = run_all(engine("contiguous", slots=1), prompts, [None] * 3)
+    stop = ref[1][1]
+    eng = engine("contiguous", slots=1)
+    r = eng.submit(prompts[1], sampling=SamplingParams(
+        max_tokens=6, stop_token_ids=(stop, 511)))
+    eng.run()
+    assert r.tokens == ref[1][:2] and r.finish_reason == "stop"
+
+
+def test_max_tokens_resolution():
+    eng = engine(slots=1)
+    with pytest.raises(ValueError, match="max_tokens"):
+        eng.submit(np.arange(4), sampling=SamplingParams(temperature=1.0))
+    # SamplingParams.max_tokens wins over the positional cap
+    r = eng.submit(np.arange(4), 99,
+                   sampling=SamplingParams(max_tokens=2))
+    eng.run()
+    assert r.n_generated == 2 and r.finish_reason == "length"
