@@ -30,6 +30,17 @@ columns report a realistic sampled workload instead of pure greedy.
 tokens, so some streams terminate early instead of at the length cap
 (variable-length workload; watch the ``gen_tok_mean`` column).
 
+``--speculate K`` turns on SPECULATIVE DECODING through the same ragged
+step (see ``repro.launch.speculative`` / docs/speculative.md): a drafter
+(``--drafter ngram|self|self-full``) proposes up to K tokens per decoding
+slot and one pass of the quantized weights + KV pool verifies them all.
+The ``accept_rate`` and ``tokens_per_step`` CSV columns report how many
+drafts survive the (distribution-preserving) rejection rule and how many
+tokens each emitting engine round produces — tokens_per_step is the
+decode-throughput multiplier speculation buys (1.0 when off). Greedy
+speculative streams are bit-identical to non-speculative ones, so the
+deterministic tick/latency columns remain gateable.
+
 ``--paged`` / ``--contiguous`` selects the KV-cache mode (see
 `repro.cache`): paged mode stores the cache as block-table-addressed pages
 — packed AMS-e2m2 planes for quantized schemes (paged-AMS, ~3.6x smaller
@@ -118,6 +129,7 @@ def run_scheme(scheme: str, work, args, vocab: int):
                       capacity=args.capacity, seed=args.seed,
                       cache_config=cache_config_for(scheme, args),
                       prefill_chunk=args.chunk,
+                      speculate_k=args.speculate, drafter=args.drafter,
                       verbose=not args.quiet)
     # warm the jit before the clock matters: one throwaway request, then
     # drop its ticks from the metrics (compile would otherwise land in p99)
@@ -160,6 +172,11 @@ def run_scheme(scheme: str, work, args, vocab: int):
         # prefix-cache effectiveness (0.0 in contiguous mode / cache off)
         "prefix_hit_rate": s.get("prefix_hit_rate", 0.0),
         "cached_frac": s.get("cached_token_frac", 0.0),
+        # speculative decoding (accept_rate 0.0 / tokens_per_step 1.0 when
+        # --speculate is off): tokens emitted per emitting engine round is
+        # the decode-throughput multiplier speculation buys
+        "accept_rate": s["accept_rate"],
+        "tokens_per_step": s["tokens_per_step"],
     }
 
 
@@ -198,6 +215,16 @@ def main(argv=None, out_lines=None):
     ap.add_argument("--stop-ids", type=int, default=0,
                     help="give each request N random stop tokens "
                          "(EOS-like early termination; max 8)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="speculative decoding: score up to K draft tokens "
+                         "per decoding slot in the same ragged step "
+                         "(0 = off); adds accept_rate / tokens_per_step "
+                         "CSV columns")
+    ap.add_argument("--drafter", default="ngram",
+                    choices=["ngram", "self", "self-full"],
+                    help="draft proposer: n-gram prompt lookup (free), "
+                         "truncated-stack self-draft, or full-stack "
+                         "self-draft (the accept-rate ceiling)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=0.3,
                     help="mean arrivals per engine tick (Poisson)")
@@ -228,6 +255,8 @@ def main(argv=None, out_lines=None):
         mode = f"{mode}/sampled-t{args.temperature:g}-p{args.top_p:g}"
     if args.stop_ids:
         mode = f"{mode}/stop{args.stop_ids}"
+    if args.speculate:
+        mode = f"{mode}/spec{args.speculate}-{args.drafter}"
     results = {}
     for scheme in args.schemes.split(","):
         scheme = scheme.strip()
@@ -248,7 +277,9 @@ def main(argv=None, out_lines=None):
                 f"kv_bytes_per_token={r['kv_bytes_per_token']} "
                 f"kv_compression={r['kv_compression']:.2f} "
                 f"prefix_hit_rate={r['prefix_hit_rate']:.2f} "
-                f"cached_frac={r['cached_frac']:.2f}")
+                f"cached_frac={r['cached_frac']:.2f} "
+                f"accept_rate={r['accept_rate']:.2f} "
+                f"tokens_per_step={r['tokens_per_step']:.2f}")
         print(line, flush=True)
         out_lines.append(line)
 
@@ -269,10 +300,13 @@ def run(out_lines, quick: bool = False):
     contiguous AND paged cache modes, a ragged chunked-prefill run (chunk=4
     — the TTFT columns are what that row moves), a shared-prefix run
     (all requests share a 16-token system prompt — prefix_hit_rate /
-    cached_frac / ttft are what prefix caching moves), and a SAMPLED run
+    cached_frac / ttft are what prefix caching moves), a SAMPLED run
     (per-request temperature-0.8/top-p-0.9 with stop tokens — the
     TTFT/latency percentiles under a realistic stochastic, variable-length
-    workload), all in one CSV."""
+    workload), and a SPECULATIVE run (k=4 full-stack self-drafting on the
+    shared-prefix workload — the accept_rate / tokens_per_step columns are
+    what speculation moves, with the greedy streams still bit-identical
+    so the tick metrics stay gated), all in one CSV."""
     argv = ["--quiet", "--requests", "3" if quick else "6",
             "--tokens", "4", "--slots", "2", "--capacity", "32",
             "--rate", "0.5", "--prompt-mean", "6", "--page-size", "8"]
@@ -281,7 +315,12 @@ def run(out_lines, quick: bool = False):
                   ["--paged", "--chunk", "4", "--shared-prefix", "16",
                    "--capacity", "48"],
                   ["--paged", "--temperature", "0.8", "--top-p", "0.9",
-                   "--stop-ids", "4"]):
+                   "--stop-ids", "4"],
+                  # the spec row needs generation headroom (k=4 drafts per
+                  # round only pay off past a few emitted rounds)
+                  ["--paged", "--chunk", "4", "--shared-prefix", "16",
+                   "--capacity", "48", "--tokens", "12",
+                   "--speculate", "4", "--drafter", "self-full"]):
         main(argv + extra, out_lines=out_lines)
 
 

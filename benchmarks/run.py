@@ -11,9 +11,11 @@ experiments/bench_results.txt):
                                 under one Poisson workload: contiguous,
                                 paged, chunked-prefill, shared-prefix
                                 (prefix-cache hit rate / cached-token
-                                fraction) and sampled (per-request
-                                temperature/top-p + stop tokens) rows in
-                                the same CSV)
+                                fraction), sampled (per-request
+                                temperature/top-p + stop tokens) and
+                                speculative (k-draft verify; accept_rate /
+                                tokens_per_step columns) rows in the
+                                same CSV)
     §Roofline summary        -> bench_roofline (reads experiments/dryrun)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
@@ -77,6 +79,11 @@ GATED = {
     "latency_ticks_p50": ("higher", 0.15),
     "latency_ticks_p99": ("higher", 0.15),
     "kv_bytes_per_token": ("higher", 0.15),
+    # speculative decoding: both are exact given the seed (deterministic
+    # drafters, greedy verify); fewer accepted drafts or fewer tokens per
+    # emitting round is a real speculation regression
+    "accept_rate": ("lower", 0.15),
+    "tokens_per_step": ("lower", 0.15),
     # NOT gated: anything wall-clock-derived. Even the AMS/fp16 speedup
     # ratio x (machine speed divides out) swings >2x between modes of one
     # --quick run on CPU — the workload is far too small to time reliably.
@@ -107,11 +114,19 @@ def parse_rows(lines):
 
 def check_regression(out_lines, baseline_path) -> int:
     """Compare this run's serving rows against the committed baseline.
-    Returns the number of regressions (printed); missing rows count."""
+    Returns the number of regressions (printed); missing rows count IN
+    BOTH DIRECTIONS — a baseline row this run no longer produces, and a
+    row this run registered that the baseline has never seen (previously
+    a new row silently escaped the gate until someone remembered to
+    regenerate the baseline)."""
     with open(baseline_path) as f:
         base = parse_rows(f)
     cur = parse_rows(out_lines)
     failures = []
+    for name in sorted(set(cur) - set(base)):
+        failures.append(
+            f"{name}: row not in baseline — regenerate with "
+            f"--write-baseline {baseline_path}")
     for name, bfields in sorted(base.items()):
         if name not in cur:
             failures.append(f"{name}: row missing from this run")
@@ -163,8 +178,8 @@ def main() -> None:
     print("# === kernel speedup (paper Table 3) ===", flush=True)
     bench_kernel_speedup.run(out_lines)
 
-    print("# === serving: contiguous vs paged vs chunked vs shared-prefix ===",
-          flush=True)
+    print("# === serving: contiguous vs paged vs chunked vs shared-prefix "
+          "vs speculative ===", flush=True)
     from benchmarks import bench_serving
     bench_serving.run(out_lines, quick=args.quick)
 

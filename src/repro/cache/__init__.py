@@ -32,6 +32,7 @@ from .pool import (  # noqa: F401
     gather_pages,
     make_gqa_page_pool,
     paged_insert,
+    paged_truncate,
     pool_bytes_per_token,
 )
 from .ref import paged_attention_ref  # noqa: F401

@@ -120,6 +120,28 @@ def paged_insert(pool: Dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
             "v": write(pool["v"], v_new)}
 
 
+# ---------------------------------------------------------------- truncate
+def paged_truncate(pool: Dict, start: jnp.ndarray, count: jnp.ndarray,
+                   block_table: jnp.ndarray, ccfg: CacheConfig,
+                   c_max: int) -> Dict:
+    """Un-insert ``count`` positions starting at ``start`` per slot: the
+    addressed (page, offset) entries of every plane are zero-scattered back
+    to the pool's INITIAL state, so a later re-insert at those positions is
+    bit-indistinguishable from a straight insert (insert quantization is
+    deterministic). The speculative engine step calls this in-program to
+    roll back rejected draft tokens; slots with ``count == 0`` (or idle
+    ``start < 0``) are no-ops via the same out-of-range-page drop the
+    insert path uses. ``c_max`` is the static rewind width bound (the
+    step's speculate_k)."""
+    num_pages = jax.tree.leaves(pool["k"])[0].shape[0]
+    page, off = _page_offset(jnp.asarray(start, jnp.int32),
+                             jnp.asarray(count, jnp.int32),
+                             block_table, ccfg, num_pages, c_max)
+    return jax.tree.map(
+        lambda leaf: leaf.at[page, off].set(
+            jnp.zeros((), leaf.dtype), mode="drop"), pool)
+
+
 # ------------------------------------------------------------------ gather
 def gather_pages(leaf: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
     """[P, page, ...] pool leaf -> [B, max_pages*page, ...] per-slot view."""

@@ -58,7 +58,19 @@ Architecture (Orca-style iteration-level scheduling):
     never the slot or tick. A finished slot frees its pages (prefix pages
     stay published per the refcount semantics above) and the queue is
     re-polled the SAME tick, so early EOS turns directly into admission
-    headroom.
+    headroom;
+  * SPECULATIVE DECODING rides the same ragged step
+    (`launch.speculative`, ``speculate_k=k`` + ``drafter``): on
+    pure-decode rounds a cheap host drafter proposes up to k tokens per
+    slot, the step feeds ``[last_token, d_1..d_k]`` so ONE pass scores
+    every draft, and an on-device verify epilogue accepts the longest
+    correct prefix, draws the bonus/corrective token, terminates in-step,
+    and zero-scatters rejected KV entries back to pool-initial state —
+    the engine then rewinds its feed position (never past the prompt, so
+    shared prefix pages are structurally untouchable). Greedy streams
+    stay bit-identical to non-speculative decoding; a round emits 1..k+1
+    tokens per model pass (``stats()``: ``accept_rate`` /
+    ``tokens_per_step``). See docs/speculative.md.
 
 Because every slot's computation is row-independent (attention hard-masks
 invalid cache positions to exact zeros), a request's token stream is
@@ -119,6 +131,7 @@ class ServeEngine:
                  slots: int = 4, capacity: int = 128, max_queue: Optional[int] = None,
                  cache_config: Optional[CacheConfig] = None,
                  prefill_chunk: int = 1, token_budget: Optional[int] = None,
+                 speculate_k: int = 0, drafter="ngram",
                  seed: int = 0, params=None, verbose: bool = False):
         cfg = get_config(arch)
         if reduced:
@@ -131,10 +144,18 @@ class ServeEngine:
             raise ValueError("prefill_chunk must be >= 1")
         self.chunk = prefill_chunk   # chunk support is gated by
         #                              build_engine_step(check_chunked_support)
+        if speculate_k < 0:
+            raise ValueError("speculate_k must be >= 0")
+        self.speculate_k = speculate_k
+        # the jitted step's chunk width must hold 1 fed token + k drafts
+        # per slot; prefill growth stays capped at prefill_chunk
+        self.step_chunk = (max(self.chunk, speculate_k + 1) if speculate_k
+                           else self.chunk)
         # per-tick token budget: every active slot is guaranteed 1; prefill
-        # chunks grow only into the leftover. Default = no throttling.
+        # chunks and draft blocks grow only into the leftover. Default = no
+        # throttling.
         self.token_budget = (token_budget if token_budget is not None
-                             else slots * self.chunk)
+                             else slots * self.step_chunk)
         if self.token_budget < 1:
             raise ValueError("token_budget must be >= 1")
         ccfg = cache_config or CacheConfig()
@@ -167,8 +188,22 @@ class ServeEngine:
                                     cache_cfg=ccfg if ccfg.paged else None)
             self._step, _, _ = build_engine_step(
                 self.mesh, cfg, self.rcfg,
-                cache_cfg=ccfg if ccfg.paged else None, chunk=self.chunk,
-                sampling=True)
+                cache_cfg=ccfg if ccfg.paged else None,
+                chunk=self.step_chunk, sampling=True,
+                speculate_k=self.speculate_k)
+            # the drafter proposes from the (possibly quantized) serving
+            # params — resolved here so "self" binds the engine's own stack
+            self.drafter = None
+            if self.speculate_k:
+                from repro.launch.speculative import Drafter, make_drafter
+                if isinstance(drafter, str):
+                    drafter = make_drafter(drafter, params=params, cfg=cfg,
+                                           capacity=capacity, tp=tp,
+                                           policy=quant)
+                if not isinstance(drafter, Drafter):
+                    raise TypeError(f"drafter must be a Drafter or name, "
+                                    f"got {type(drafter).__name__}")
+                self.drafter = drafter
             # paged pools need no per-slot reset: positions are written
             # front-to-front per request, so every valid key is fresh, and
             # recurrent-state families are rejected by check_paged_support
@@ -201,6 +236,9 @@ class ServeEngine:
         self._tick_tokens: List[int] = []      # tokens generated per tick
         self._prompt_tokens = 0                # prompt positions admitted
         self._cached_tokens = 0                # ... served from shared pages
+        self._spec_proposed = 0                # draft tokens scored
+        self._spec_accepted = 0                # ... accepted by the verify
+        self._emit_rounds = 0                  # slot-rounds emitting tokens
 
     # ------------------------------------------------------------- frontend
     def submit(self, prompt, max_tokens: Optional[int] = None,
@@ -324,7 +362,8 @@ class ServeEngine:
         """
         t0 = time.perf_counter()
         paged = self.cache_cfg.paged
-        C = self.chunk
+        C = self.step_chunk              # token-buffer width fed to the step
+        PC = self.chunk                  # prefill growth cap per slot
         with use_mesh(self.mesh):
             # 1) admit queued requests into free slots (see _admit)
             self._admit()
@@ -337,18 +376,39 @@ class ServeEngine:
 
             # 2) size each slot's chunk under the global token budget:
             #    every active slot gets 1 guaranteed token; prefilling slots
-            #    grow toward C (never past the prompt end) from the leftover
+            #    grow toward the prefill chunk (never past the prompt end),
+            #    pure-decode slots append up to speculate_k DRAFT tokens —
+            #    both only from the leftover budget
             nvalid = np.zeros(self.slots, np.int32)
+            ndraft = np.zeros(self.slots, np.int32)
+            proposals: Dict[int, np.ndarray] = {}
             leftover = self.token_budget - self.active_count
             for s, req in enumerate(self.active):
                 if req is None:
                     continue
                 n = 1
                 rem = req.n_prefix + req.prompt_len - int(self.fed[s])
-                if C > 1 and rem > 1:      # still prefilling past this tick
-                    extra = min(min(C, rem) - 1, leftover)
+                if PC > 1 and rem > 1:     # still prefilling past this tick
+                    extra = min(min(PC, rem) - 1, leftover)
                     n += max(0, extra)
                     leftover -= n - 1
+                elif self.speculate_k and rem <= 0:
+                    # decode round: drafts past the length cap could write
+                    # beyond the slot's reserved kv_need positions, so the
+                    # cap also bounds the draft count
+                    k_cap = min(self.speculate_k,
+                                req.max_tokens - 1 - req.n_generated,
+                                leftover)
+                    if k_cap > 0:
+                        hist = np.concatenate(
+                            [req.prompt, np.asarray(req.tokens, np.int32)])
+                        d = np.asarray(self.drafter.propose(hist, int(k_cap)),
+                                       np.int32).reshape(-1)[:k_cap]
+                        if d.size:
+                            proposals[s] = d
+                            ndraft[s] = d.size
+                            n += int(d.size)
+                            leftover -= int(d.size)
                 nvalid[s] = n
 
             # 3) build this tick's ragged inputs: [B, C] token block per
@@ -379,15 +439,20 @@ class ServeEngine:
                         emask[s, j] = True
                     elif idx < req.n_prefix + req.prompt_len:
                         token[s, j] = req.prompt[idx - req.n_prefix]
-                    else:
+                    elif j == 0 or s not in proposals:
                         token[s, j] = self.last_token[s]
+                    else:                  # chunk tail: this round's drafts
+                        token[s, j] = proposals[s][j - 1]
 
             # 4) ONE jitted step for every slot (ragged when C > 1); the
             #    per-slot sampling rows ride along as one pytree arg and
             #    the step hands back the sampled token + in-step done flag
             if C > 1:
                 args = (self.params, jnp.asarray(token), jnp.asarray(pos),
-                        jnp.asarray(nvalid), self.cache)
+                        jnp.asarray(nvalid))
+                if self.speculate_k:
+                    args += (jnp.asarray(ndraft),)
+                args += (self.cache,)
             else:
                 args = (self.params, jnp.asarray(token[:, 0]),
                         jnp.asarray(pos), self.cache)
@@ -400,8 +465,14 @@ class ServeEngine:
                     args += (jnp.asarray(embeds[:, 0]),
                              jnp.asarray(emask[:, 0]))
             args += ({k: jnp.asarray(v) for k, v in self.samp.items()},)
-            next_tok, done, self.cache = self._step(*args)
-            next_tok = np.asarray(next_tok)
+            if self.speculate_k:
+                out_tok, n_emit, acc, done, self.cache = self._step(*args)
+                out_tok = np.asarray(out_tok)
+                n_emit = np.asarray(n_emit)
+                acc = np.asarray(acc)
+            else:
+                next_tok, done, self.cache = self._step(*args)
+                next_tok = np.asarray(next_tok)
             done = np.asarray(done)
 
             # 5) advance slot state by consumed chunk lengths; collect
@@ -427,13 +498,27 @@ class ServeEngine:
                 if i + n - 1 >= req.n_prefix + req.prompt_len - 1:
                     # this chunk consumed the last prompt token or a generated
                     # token -> the last valid position's draw is the next
-                    # generated token
-                    tok = int(next_tok[s])
-                    req.tokens.append(tok)
+                    # generated token (speculative rounds emit the accepted
+                    # draft prefix + the bonus/corrective draw in one go)
+                    k_s = int(ndraft[s])
+                    if self.speculate_k:
+                        a = int(acc[s])
+                        emitted = [int(t) for t in out_tok[s, :int(n_emit[s])]]
+                        if k_s:
+                            self._spec_proposed += k_s
+                            self._spec_accepted += a
+                            req.drafted += k_s
+                            req.accepted_drafts += a
+                    else:
+                        emitted = [int(next_tok[s])]
+                    was_first = not req.tokens
+                    req.tokens.extend(emitted)
+                    tok = emitted[-1]
                     self.last_token[s] = tok
                     self.samp["ngen"][s] = len(req.tokens)
-                    generated += 1
-                    if len(req.tokens) == 1:
+                    generated += len(emitted)
+                    self._emit_rounds += 1
+                    if was_first:
                         req.first_token_tick = self.tick
                     if bool(done[s]):
                         # in-step termination: stop-token hit or length cap
@@ -448,6 +533,21 @@ class ServeEngine:
                         if paged:
                             self.alloc.free(req.rid)
                             self.block_tables[s] = 0
+                    elif k_s:
+                        # ROLLBACK: the step already zero-scattered the
+                        # rejected draft entries (positions i+1+a .. i+k_s)
+                        # out of every cache leaf; rewind the feed position
+                        # so the next round re-inserts there. Speculation
+                        # starts strictly after the prompt, so the rewind
+                        # target can never reach a shared prefix page.
+                        new_fed = i + 1 + a
+                        assert new_fed >= req.n_prefix + req.prompt_len \
+                            and new_fed > req.cached_len - 1, (
+                            f"slot {s}: speculative rewind to {new_fed} "
+                            f"would cross the shared/prompt boundary "
+                            f"(cached {req.cached_len}, prompt end "
+                            f"{req.n_prefix + req.prompt_len})")
+                        self.fed[s] = new_fed
             # freed capacity becomes admission headroom the SAME tick: a
             # stop-token hit admits the queue head before the tick closes
             # (its first chunk runs next tick)
@@ -478,6 +578,9 @@ class ServeEngine:
         self.finished = []
         self._prompt_tokens = 0
         self._cached_tokens = 0
+        self._spec_proposed = 0
+        self._spec_accepted = 0
+        self._emit_rounds = 0
         if self.alloc is not None:
             self.alloc.reset_stats()
 
@@ -534,6 +637,15 @@ class ServeEngine:
             "queue_depth": self.sched.queue_depth,
             "kv_bytes_per_token": self.kv_bytes_per_token(),
             "kv_compression_vs_bf16": self.kv_compression_vs_bf16(),
+            # speculative decoding: drafts scored / accepted, and tokens
+            # emitted per emitting slot-round (1.0 when not speculating —
+            # every emission is a single draw)
+            "spec_proposed": self._spec_proposed,
+            "spec_accepted": self._spec_accepted,
+            "accept_rate": (self._spec_accepted / self._spec_proposed
+                            if self._spec_proposed else 0.0),
+            "tokens_per_step": (float(tok.sum()) / self._emit_rounds
+                                if self._emit_rounds else 0.0),
         }
         if self.alloc is not None:
             out["free_pages"] = self.alloc.free_pages

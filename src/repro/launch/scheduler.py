@@ -62,6 +62,10 @@ class Request:
     tokens: List[int] = dataclasses.field(default_factory=list)
     pages: List[int] = dataclasses.field(default_factory=list)  # paged mode
 
+    # speculative decoding accounting (engine-filled; see launch.speculative)
+    drafted: int = 0           # draft tokens scored for this request
+    accepted_drafts: int = 0   # ... accepted by the verify rule
+
     # prefix caching (paged modes, engine-filled — see cache.allocator):
     page_hashes: Tuple[bytes, ...] = ()   # chain hash per FULL prompt page
     cached_len: int = 0    # positions served from shared pages at admission;

@@ -285,7 +285,7 @@ def build_serve_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
 
 def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
                       cache_cfg=None, chunk: int = 1,
-                      sampling: bool = False):
+                      sampling: bool = False, speculate_k: int = 0):
     """Slot-masked decode step for the continuous-batching engine.
 
     One tick serves every slot of the fixed-capacity KV cache at its OWN
@@ -328,6 +328,26 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
     step during prefill instead of a separate prefill program ([B, D] +
     [B] mask in the one-token step, [B, C, D] + [B, C] in the ragged step).
 
+    SPECULATIVE DECODING (``speculate_k`` = K > 0, requires sampling and
+    chunk >= K+1): a slot's chunk may end in up to K DRAFT tokens (an
+    extra [B] int32 ``ndraft`` arg after nvalid carries the per-slot draft
+    count; 0 = plain decode/prefill round, identical to before). The step
+    scores all fed positions in the one ragged pass, runs the
+    accept/resample rule of `repro.launch.speculative.verify_tokens` on
+    device, zero-scatters the REJECTED suffix out of every cache leaf
+    in-program (`speculative.truncate_cache` — so the cache the step hands
+    back never contains rejected entries), and returns the whole emission:
+
+        step(...) -> (out_tokens [B, K+1], n_emit [B], accepted [B],
+                      done [B], cache)
+
+    ``out_tokens[b, :n_emit[b]]`` are slot b's emitted tokens this round
+    (accepted drafts + the bonus/corrective draw, truncated at an in-step
+    stop/length hit); ``accepted`` is the raw accepted-draft count (the
+    accept-rate statistic). Temperature-0 rows emit bit-exactly the
+    non-speculative greedy stream; the host engine rewinds its feed
+    position to ``pos + 1 + accepted``.
+
     With a paged ``cache_cfg`` (see `repro.cache.CacheConfig`), the cache
     pytree holds PAGE POOLS and the step takes the per-slot block tables as
     an extra [B, max_pages_per_seq] int32 arg after the cache. A block-table
@@ -351,9 +371,36 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
     if chunked:
         from repro.models import check_chunked_support
         check_chunked_support(cfg)
+    spec = speculate_k > 0
+    if spec and not sampling:
+        raise ValueError("speculate_k requires sampling=True (the verify "
+                         "rule subsumes the sampling epilogue)")
+    if spec and chunk < speculate_k + 1:
+        raise ValueError(
+            f"speculate_k={speculate_k} needs chunk >= {speculate_k + 1} "
+            f"(one fed token + k drafts per slot), got chunk={chunk}")
 
     def core(params, token, pos, cache, block_tables=None, embeds=None,
-             embed_mask=None, nvalid=None, samp=None):
+             embed_mask=None, nvalid=None, samp=None, ndraft=None):
+        if spec:
+            from repro.launch.speculative import truncate_cache, verify_tokens
+            logits, cache = decode_step(
+                params, token, cache, pos, cfg, tp=ctx.tp, policy=policy,
+                ctx=ctx, dtype=jnp.bfloat16, embeds=embeds,
+                embed_mask=embed_mask, block_tables=block_tables,
+                cache_cfg=cache_cfg, nvalid=nvalid, ndraft=ndraft,
+                n_logits=speculate_k + 1)
+            out, n_emit, accepted, done = verify_tokens(
+                logits, token, nvalid, ndraft, samp, speculate_k)
+            # un-insert the rejected suffix IN-PROGRAM: positions
+            # pos+1+accepted .. pos+ndraft revert to pool-initial zeros,
+            # so the returned cache never holds rejected entries and the
+            # host's position rewind is all the rollback there is
+            cache = truncate_cache(
+                cache, pos + 1 + accepted,
+                jnp.maximum(ndraft - accepted, 0), speculate_k,
+                cache_cfg=cache_cfg, block_tables=block_tables)
+            return out, n_emit, accepted, done, cache
         logits, cache = decode_step(
             params, token, cache, pos, cfg, tp=ctx.tp, policy=policy,
             ctx=ctx, dtype=jnp.bfloat16, embeds=embeds, embed_mask=embed_mask,
@@ -381,6 +428,7 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
     # donated cache index, so an optional input added here can never be
     # mis-threaded in one branch only
     arg_names = (["token", "pos"] + (["nvalid"] if chunked else [])
+                 + (["ndraft"] if spec else [])
                  + ["cache"] + (["block_tables"] if paged else [])
                  + (["embeds", "embed_mask"] if has_prefix else [])
                  + (["sampling"] if sampling else []))
@@ -390,12 +438,17 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
         return core(params, kw["token"], kw["pos"], kw["cache"],
                     kw.get("block_tables"), kw.get("embeds"),
                     kw.get("embed_mask"), kw.get("nvalid"),
-                    kw.get("sampling"))
+                    kw.get("sampling"), kw.get("ndraft"))
 
     in_shardings = (p_shard,) + tuple(
         c_shard if n == "cache" else None for n in arg_names)
-    out_shardings = ((tok_shard, tok_shard, c_shard) if sampling
-                     else (tok_shard, c_shard))
+    tok2_shard = NamedSharding(mesh, P(dp, None))
+    if spec:
+        out_shardings = (tok2_shard, tok_shard, tok_shard, tok_shard, c_shard)
+    elif sampling:
+        out_shardings = (tok_shard, tok_shard, c_shard)
+    else:
+        out_shardings = (tok_shard, c_shard)
     jitted = jax.jit(engine_fn, in_shardings=in_shardings,
                      out_shardings=out_shardings,
                      donate_argnums=(1 + arg_names.index("cache"),))
@@ -409,6 +462,9 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
     )
     if chunked:
         arg_shapes["nvalid"] = jax.ShapeDtypeStruct((B,), jnp.int32,
+                                                    sharding=tok_shard)
+    if spec:
+        arg_shapes["ndraft"] = jax.ShapeDtypeStruct((B,), jnp.int32,
                                                     sharding=tok_shard)
     arg_shapes["cache"] = cache_shape
     if paged:
@@ -426,6 +482,8 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
                      cache=c_shard)
     if chunked:
         shardings["nvalid"] = tok_shard
+    if spec:
+        shardings["ndraft"] = tok_shard
     return jitted, arg_shapes, shardings
 
 

@@ -337,6 +337,30 @@ def cache_insert_chunk(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray,
     return cache.at[b_idx, idx].set(new.astype(cache.dtype), mode="drop")
 
 
+def cache_truncate_chunk(cache: jnp.ndarray, start: jnp.ndarray,
+                         count: jnp.ndarray, c_max: int,
+                         axis_name: Optional[str] = None) -> jnp.ndarray:
+    """Zero per-slot positions ``start[b] .. start[b] + count[b] - 1`` of a
+    contiguous cache leaf [B, S_loc, ...] — the inverse of
+    `cache_insert_chunk`, restoring the zero-initialized state so a later
+    re-insert is bit-identical to a straight insert. Used by the
+    speculative engine step to un-insert rejected draft tokens; slots with
+    ``count == 0`` (or ``start < 0``) are no-ops via the same
+    out-of-range-row drop the insert uses. ``c_max`` is the static rewind
+    width bound."""
+    B, S_loc = cache.shape[0], cache.shape[1]
+    shard = jax.lax.axis_index(axis_name) if axis_name else 0
+    start = jnp.asarray(start, jnp.int32)
+    count = jnp.asarray(count, jnp.int32)
+    j = jnp.arange(c_max, dtype=jnp.int32)[None, :]
+    local = start[:, None] + j - shard * S_loc
+    ok = ((start[:, None] >= 0) & (j < count[:, None])
+          & (local >= 0) & (local < S_loc))
+    idx = jnp.where(ok, local, S_loc)                  # OOB -> dropped
+    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    return cache.at[b_idx, idx].set(jnp.zeros((), cache.dtype), mode="drop")
+
+
 # ---------------------------------------------------------------------------
 # GQA block
 # ---------------------------------------------------------------------------

@@ -466,7 +466,8 @@ def forward_seq(params, tokens, cfg, *, tp=1, policy=None, ctx=None,
 
 def decode_step(params, token, cache, pos, cfg, *, tp=1, policy=None,
                 ctx=None, dtype=jnp.bfloat16, embeds=None, embed_mask=None,
-                block_tables=None, cache_cfg=None, nvalid=None):
+                block_tables=None, cache_cfg=None, nvalid=None, ndraft=None,
+                n_logits=1):
     """One decode step. token: [B] int32; pos: scalar int32 (insert position)
     or [B] int32 per-slot positions (continuous-batching engine; a negative
     position marks an idle slot whose cache write is suppressed).
@@ -489,13 +490,24 @@ def decode_step(params, token, cache, pos, cfg, *, tp=1, policy=None,
     engine uses this to stream modality prefix embeddings (VLM patches /
     audio frames) through the same decode step during chunked prefill.
 
-    Returns (logits [B, V], new cache)."""
+    SPECULATIVE SCORING (``n_logits`` = K+1 > 1, ragged step only): the
+    chunk's last ``ndraft[b]`` tokens are DRAFT tokens; logits come back
+    [B, K+1, V] at positions ``nvalid-1-ndraft .. nvalid-1`` (clipped into
+    the chunk) — row j scores the token following draft j, row 0 is
+    exactly the last-valid-token row the plain step returns, so slots with
+    ``ndraft == 0`` (prefill / plain decode) are unchanged.
+
+    Returns (logits [B, V] — or [B, n_logits, V] when n_logits > 1 —,
+    new cache)."""
     if token.ndim == 2:
         return _decode_step_chunk(params, token, cache, pos, nvalid, cfg,
                                   tp=tp, policy=policy, ctx=ctx, dtype=dtype,
                                   embeds=embeds, embed_mask=embed_mask,
                                   block_tables=block_tables,
-                                  cache_cfg=cache_cfg)
+                                  cache_cfg=cache_cfg, ndraft=ndraft,
+                                  n_logits=n_logits)
+    if n_logits != 1:
+        raise ValueError("n_logits > 1 requires the ragged [B, C] step")
     dims = model_dims(cfg, tp)
     pat = layer_pattern(cfg)
     L, Pn = cfg.num_layers, len(pat)
@@ -542,10 +554,11 @@ def decode_step(params, token, cache, pos, cfg, *, tp=1, policy=None,
 def _decode_step_chunk(params, token, cache, pos, nvalid, cfg, *, tp=1,
                        policy=None, ctx=None, dtype=jnp.bfloat16,
                        embeds=None, embed_mask=None, block_tables=None,
-                       cache_cfg=None):
+                       cache_cfg=None, ndraft=None, n_logits=1):
     """Ragged multi-token step body (see `decode_step`): token [B, C],
     pos/nvalid [B]. Returns (logits [B, V] at each slot's last valid
-    token, new cache)."""
+    token — or [B, n_logits, V] at the last ndraft+1 valid positions when
+    speculating — and the new cache)."""
     dims = model_dims(cfg, tp)
     pat = layer_pattern(cfg)
     L, Pn = cfg.num_layers, len(pat)
@@ -583,7 +596,20 @@ def _decode_step_chunk(params, token, cache, pos, nvalid, cfg, *, tp=1,
             tails[f"sub{i}"] = nc
         new_cache["tail"] = tails
     # logits only at each slot's LAST valid token — the head (the widest
-    # matmul in the step) never runs over discarded prefill positions
+    # matmul in the step) never runs over discarded prefill positions.
+    # Speculative scoring widens the gather to the last ndraft+1 valid
+    # positions ([B, n_logits, D]); index 0 degenerates to the plain
+    # last-valid row for slots with ndraft == 0, so non-speculating slots
+    # see identical logits either way.
+    if n_logits > 1:
+        nd = (jnp.zeros_like(nvalid) if ndraft is None
+              else jnp.asarray(ndraft, jnp.int32))
+        sel = jnp.clip(nvalid[:, None] - 1 - nd[:, None]
+                       + jnp.arange(n_logits, dtype=jnp.int32)[None, :],
+                       0, token.shape[1] - 1)                     # [B, K+1]
+        x_sel = jnp.take_along_axis(x, jnp.broadcast_to(
+            sel[:, :, None], sel.shape + (x.shape[2],)), axis=1)  # [B, K+1, D]
+        return _head(params, x_sel, cfg, dims, policy), new_cache
     last = jnp.clip(nvalid - 1, 0, token.shape[1] - 1)[:, None, None]
     x_last = jnp.take_along_axis(x, jnp.broadcast_to(
         last, (x.shape[0], 1, x.shape[2])), axis=1)               # [B, 1, D]

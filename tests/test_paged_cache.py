@@ -17,6 +17,7 @@ pages are freed on completion, and strict FIFO holds under head-of-line
 blocking.
 """
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -30,6 +31,7 @@ from repro.cache import (
     paged_attend,
     paged_attention_ref,
     paged_insert,
+    paged_truncate,
 )
 from repro.core.kv_quant import dequantize_kv, kv_bytes, quantize_kv
 from repro.launch.engine import ServeEngine
@@ -235,6 +237,77 @@ def test_paged_ams_engine_matches_ref_oracle():
     for a, b in zip(r0, r1):
         np.testing.assert_array_equal(np.asarray(a.tokens),
                                       np.asarray(b.tokens))
+
+
+# ------------------------------------------- truncate / rewind (speculative)
+def _insert_hist(pool, bt, k_hist, v_hist, lens, ccfg, t0=0):
+    """Insert history positions t0.. per sequence (masked past each len)."""
+    for t in range(t0, k_hist.shape[1]):
+        pos = jnp.asarray(np.where(t < lens, t, -1), jnp.int32)
+        pool = paged_insert(pool, k_hist[:, t:t + 1], v_hist[:, t:t + 1],
+                            pos, bt, ccfg)
+    return pool
+
+
+def test_paged_truncate_rewind_reinsert_lattice_exact():
+    """The speculative-rollback contract: truncating the last m inserted
+    positions restores the EXACT pool state before they were written (the
+    packed planes, bit for bit), so rewind + re-insert of different tokens
+    is indistinguishable from a straight insert — and the gathered pages
+    stay lattice-exact vs the direct quantize/dequantize oracle the
+    `cache/ref.py` path dequantizes through."""
+    ccfg = CacheConfig(kind="paged_ams", page_size=4).sized(capacity=16,
+                                                            slots=2)
+    B, kv, hd, T = 2, 2, 32, 13
+    lens = np.array([13, 7])
+    count = np.array([5, 3])              # rewind m < C tokens per sequence
+    start = lens - count
+    rng = np.random.default_rng(5)
+    bt = jnp.asarray(rng.permutation(ccfg.num_pages)[
+        : B * ccfg.max_pages_per_seq].reshape(B, -1).astype(np.int32))
+    mk = lambda: jnp.asarray(rng.standard_normal((B, T, kv, hd)),
+                             dtype=jnp.bfloat16)
+    kA, vA = mk(), mk()
+    pool0 = make_gqa_page_pool(ccfg, kv, hd)
+    poolA = _insert_hist(pool0, bt, kA, vA, lens, ccfg)
+
+    poolT = paged_truncate(poolA, jnp.asarray(start, jnp.int32),
+                           jnp.asarray(count, jnp.int32), bt, ccfg, c_max=5)
+    # (1) truncation restores the exact prefix-only pool state
+    poolP = _insert_hist(pool0, bt, kA, vA, start, ccfg)
+    for got, want in zip(jax.tree.leaves(poolT), jax.tree.leaves(poolP)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    # (2) re-insert DIFFERENT tokens at the rewound positions: bit-equal to
+    # a straight insert of the combined history
+    kB, vB = mk(), mk()
+    kN = jnp.where((np.arange(T)[None, :, None, None] >= start[:, None, None, None]),
+                   kB, kA)
+    vN = jnp.where((np.arange(T)[None, :, None, None] >= start[:, None, None, None]),
+                   vB, vA)
+    poolR = _insert_hist(poolT, bt, kN, vN, lens, ccfg, t0=int(start.min()))
+    poolS = _insert_hist(pool0, bt, kN, vN, lens, ccfg)
+    for got, want in zip(jax.tree.leaves(poolR), jax.tree.leaves(poolS)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    # (3) gathered + dequantized pages are lattice-exact vs the direct
+    # round trip at every valid position
+    kq, vq = gather_kv(poolR, bt, 16, ccfg, dtype=jnp.float32)
+    for hist, got in ((kN, kq), (vN, vq)):
+        want = dequantize_kv(quantize_kv(hist), 16, dtype=jnp.float32)
+        for b, ln in enumerate(lens):
+            np.testing.assert_array_equal(
+                np.asarray(got[b, :ln]), np.asarray(want[b, :ln]))
+
+
+def test_paged_truncate_zero_count_is_noop():
+    ccfg = CacheConfig(kind="paged_ams", page_size=4).sized(capacity=16,
+                                                            slots=2)
+    pool, bt, lens, _, _ = _filled_pool(ccfg, lens=(13, 7))
+    out = paged_truncate(pool, lens, jnp.zeros(2, jnp.int32), bt, ccfg,
+                         c_max=4)
+    for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(pool)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 # ----------------------------------------------------------- kv accounting
