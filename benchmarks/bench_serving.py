@@ -63,6 +63,7 @@ CSV lines go to stdout in the benchmarks/run.py style:
 from __future__ import annotations
 
 import argparse
+import os
 
 import numpy as np
 
@@ -121,7 +122,9 @@ def sampling_for(args, i: int, vocab: int):
                           stop_token_ids=stop)
 
 
-def run_scheme(scheme: str, work, args, vocab: int):
+def _drive(scheme: str, work, args, vocab: int, obs=None):
+    """Build a ServeEngine, warm the jit, drive the full workload.
+    Returns (engine, requests, per-tick utilization)."""
     from repro.launch.engine import ServeEngine
 
     eng = ServeEngine(args.arch, reduced=args.reduced, scheme=scheme,
@@ -130,7 +133,7 @@ def run_scheme(scheme: str, work, args, vocab: int):
                       cache_config=cache_config_for(scheme, args),
                       prefill_chunk=args.chunk,
                       speculate_k=args.speculate, drafter=args.drafter,
-                      verbose=not args.quiet)
+                      obs=obs, verbose=not args.quiet)
     # warm the jit before the clock matters: one throwaway request, then
     # drop its ticks from the metrics (compile would otherwise land in p99)
     warm = eng.submit(np.zeros(1, np.int32), 1)
@@ -147,8 +150,69 @@ def run_scheme(scheme: str, work, args, vocab: int):
                                    sampling=sampling_for(args, i, vocab)))
         eng.step()
         util.append(eng.active_count / args.slots)
+    return eng, reqs, util
 
+
+def obs_check(eng, reqs, scheme: str, work, args, vocab: int, out_lines):
+    """The telemetry zero-perturbation assertion: replay the IDENTICAL
+    workload with observability disabled (no registry, no spans, no cost
+    model) and require every deterministic output to match bit-for-bit —
+    engine ticks to drain, every token stream, every lifecycle tick.
+    Telemetry that moved any of these would silently invalidate the
+    committed bench baseline; this turns that into a loud failure."""
+    from repro.obs import ObsConfig
+
+    eng2, reqs2, _ = _drive(scheme, work, args, vocab,
+                            obs=ObsConfig(enabled=False))
+    assert eng.tick == eng2.tick, (
+        f"obs-check: tick count moved with telemetry on "
+        f"({eng.tick} vs {eng2.tick})")
+    assert len(reqs) == len(reqs2)
+    for a, b in zip(reqs, reqs2):
+        assert a.tokens == b.tokens, (
+            f"obs-check: request {a.rid} token stream diverged")
+        assert (a.first_token_tick, a.finish_tick, a.finish_reason) == (
+            b.first_token_tick, b.finish_tick, b.finish_reason), (
+            f"obs-check: request {a.rid} lifecycle diverged")
+    assert eng.kv_bytes_per_token() == eng2.kv_bytes_per_token()
+    line = (f"# obs-check/{scheme}: telemetry perturbation 0% "
+            f"(ticks={eng.tick} streams={len(reqs)} identical with obs off)")
+    print(line, flush=True)
+    out_lines.append(line)
+
+
+def run_scheme(scheme: str, work, args, vocab: int, out_lines=None):
+    obs = None
+    if args.trace:
+        from repro.obs import ObsConfig
+        obs = ObsConfig(trace=True)
+    eng, reqs, util = _drive(scheme, work, args, vocab, obs=obs)
     s = eng.stats()
+
+    if args.trace:
+        # per-scheme artifact pair: Perfetto/chrome trace + Prometheus
+        # snapshot (load the .json at ui.perfetto.dev, scrape the .prom)
+        base, ext = os.path.splitext(args.trace)
+        if os.path.dirname(base):
+            os.makedirs(os.path.dirname(base), exist_ok=True)
+        trace_path = f"{base}-{scheme}{ext or '.json'}"
+        prom_path = f"{base}-{scheme}.prom"
+        eng.trace.save(trace_path)
+        eng.metrics.write_prom(prom_path)
+        print(f"# trace/{scheme}: wrote {trace_path} + {prom_path}",
+              flush=True)
+    if args.hlo_cost:
+        from repro.obs import attribution
+        rep = attribution(eng, hlo=True)
+        print(f"# hlo-cost/{scheme}: "
+              f"hlo_flops_per_tick={rep.get('hlo_flops_per_tick', 0):.4g} "
+              f"hlo_hbm_bytes_per_tick="
+              f"{rep.get('hlo_hbm_bytes_per_tick', 0):.4g} "
+              f"floor_hbm_bytes_per_tick="
+              f"{rep.get('floor_hbm_bytes_per_tick', 0):.4g}", flush=True)
+    if args.obs_check:
+        obs_check(eng, reqs, scheme, work, args, vocab,
+                  out_lines if out_lines is not None else [])
     # eng.finished after the warmup reset == reqs, so stats() IS the
     # per-request latency source (no second hand-rolled computation)
     return {
@@ -225,6 +289,20 @@ def main(argv=None, out_lines=None):
                     help="draft proposer: n-gram prompt lookup (free), "
                          "truncated-stack self-draft, or full-stack "
                          "self-draft (the accept-rate ceiling)")
+    ap.add_argument("--trace", metavar="PATH", default="",
+                    help="dump a Perfetto-loadable chrome trace + Prometheus "
+                         "snapshot per scheme: PATH-<scheme>.json / .prom "
+                         "(enables per-request spans + synchronous device-"
+                         "step timing; wall-clock columns only, the "
+                         "deterministic tick/kv columns are unchanged)")
+    ap.add_argument("--obs-check", action="store_true",
+                    help="re-run each scheme's workload with observability "
+                         "disabled and assert 0%% perturbation: identical "
+                         "ticks, token streams and lifecycle ticks")
+    ap.add_argument("--hlo-cost", action="store_true",
+                    help="lower+compile the engine step and print XLA's own "
+                         "per-tick FLOP/HBM-byte estimate next to the "
+                         "analytic roofline floor")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=0.3,
                     help="mean arrivals per engine tick (Poisson)")
@@ -260,7 +338,8 @@ def main(argv=None, out_lines=None):
     results = {}
     for scheme in args.schemes.split(","):
         scheme = scheme.strip()
-        results[scheme] = r = run_scheme(scheme, work, args, cfg.vocab_size)
+        results[scheme] = r = run_scheme(scheme, work, args, cfg.vocab_size,
+                                         out_lines=out_lines)
         us_per_tok = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
         line = (f"serving/{scheme}/{mode},{us_per_tok:.1f},"
                 f"tokens_per_s={r['tokens_per_s']:.2f} "
@@ -306,11 +385,17 @@ def run(out_lines, quick: bool = False):
     workload), and a SPECULATIVE run (k=4 full-stack self-drafting on the
     shared-prefix workload — the accept_rate / tokens_per_step columns are
     what speculation moves, with the greedy streams still bit-identical
-    so the tick metrics stay gated), all in one CSV."""
+    so the tick metrics stay gated), all in one CSV.
+
+    Telemetry satellites (repro.obs) ride the sweep: the paged row re-runs
+    with observability disabled and asserts 0% perturbation (--obs-check),
+    and the shared-prefix + speculative row dumps a Perfetto trace +
+    Prometheus snapshot per scheme into experiments/ (--trace) — the CI
+    bench job uploads them as artifacts."""
     argv = ["--quiet", "--requests", "3" if quick else "6",
             "--tokens", "4", "--slots", "2", "--capacity", "32",
             "--rate", "0.5", "--prompt-mean", "6", "--page-size", "8"]
-    for extra in (["--contiguous"], ["--paged"],
+    for extra in (["--contiguous"], ["--paged", "--obs-check"],
                   ["--paged", "--chunk", "4"],
                   ["--paged", "--chunk", "4", "--shared-prefix", "16",
                    "--capacity", "48"],
@@ -320,7 +405,8 @@ def run(out_lines, quick: bool = False):
                   # round only pay off past a few emitted rounds)
                   ["--paged", "--chunk", "4", "--shared-prefix", "16",
                    "--capacity", "48", "--tokens", "12",
-                   "--speculate", "4", "--drafter", "self-full"]):
+                   "--speculate", "4", "--drafter", "self-full",
+                   "--trace", "experiments/serving_trace.json"]):
         main(argv + extra, out_lines=out_lines)
 
 

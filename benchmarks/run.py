@@ -20,6 +20,20 @@ experiments/bench_results.txt):
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 
+ARTIFACTS (uploaded by the CI bench job with ``if: always()``):
+    experiments/bench_results.txt       — every CSV row of the sweep
+    experiments/serving_trace-*.json    — Perfetto-loadable chrome trace of
+                                          the shared-prefix + speculative
+                                          serving row, per scheme (load at
+                                          ui.perfetto.dev; see
+                                          docs/observability.md)
+    experiments/serving_trace-*.prom    — Prometheus text-format snapshot of
+                                          the same run's metrics registry
+The paged serving row additionally re-runs itself with observability
+disabled and asserts 0% perturbation of the deterministic tick/stream
+metrics (``--obs-check``), so telemetry can never silently invalidate the
+committed baseline.
+
 REGRESSION GATE (``--check benchmarks/baseline.csv``): after the sweep,
 the serving rows are compared against a committed baseline and the run
 exits non-zero on a >15% regression in any deterministic serving metric —

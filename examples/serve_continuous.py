@@ -30,6 +30,11 @@ asserts the token streams are identical to the non-speculative run and
 prints the measured accept rate, tokens per emitting round, and tick
 savings.
 
+The first run prints a live one-line-per-tick TICKER read straight off the
+engine's metrics registry (``repro.obs``; see docs/observability.md):
+active slots, queue depth, prefix-cache hit rate, speculative accept rate,
+KV bytes/token and achieved-vs-floor HBM traffic.
+
 Run:  PYTHONPATH=src python examples/serve_continuous.py [--contiguous]
 """
 
@@ -40,6 +45,7 @@ import numpy as np
 from repro.cache import CacheConfig
 from repro.launch.engine import ServeEngine
 from repro.launch.sampling import SamplingParams
+from repro.obs import ticker_line
 
 SYS_LEN = 16          # shared system prompt: two full 8-token pages
 PAGED = "--contiguous" not in sys.argv[1:]
@@ -59,7 +65,7 @@ SCHEDULE = {
 }
 
 
-def drive(prefix_cache: bool):
+def drive(prefix_cache: bool, ticker: bool = False):
     cache_config = (CacheConfig(kind="paged_ams", page_size=8,
                                 prefix_cache=prefix_cache)
                     if PAGED else None)
@@ -82,6 +88,12 @@ def drive(prefix_cache: bool):
                      sp.stop_token_ids else "")
                   + f") queue={eng.sched.queue_depth}")
         info = eng.step()
+        if ticker and info["active"]:
+            # live telemetry read straight off the metrics registry
+            # (repro.obs): active slots, queue depth, prefix hit rate,
+            # speculative accept rate, KV bytes/token and achieved HBM
+            # traffic vs the analytic roofline floor
+            print(ticker_line(eng))
         for req in info["finished"]:
             print(f"tick {eng.tick - 1:3d} | finish  r{req.rid} "
                   f"slot {req.slot} (admitted t{req.admit_tick}, "
@@ -90,7 +102,7 @@ def drive(prefix_cache: bool):
     return requests, eng
 
 
-requests, eng = drive(prefix_cache=True)
+requests, eng = drive(prefix_cache=True, ticker=True)
 stats = eng.stats()
 print(f"\n{len(requests)} requests in {stats['ticks']} ticks | "
       f"{stats['tokens_generated']} tokens @ {stats['tokens_per_s']:.1f} tok/s "

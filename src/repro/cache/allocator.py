@@ -44,6 +44,8 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import NULL_REGISTRY
+
 
 def prefix_page_hashes(tokens, page_size: int,
                        content_key: str = "") -> Tuple[bytes, ...]:
@@ -70,11 +72,34 @@ class PageAllocator:
     """Refcounting allocator over `num_pages` fixed-size pages with a
     block-hash index of cached, evictable prefix pages (module docstring)."""
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, metrics=None):
         if num_pages < 1:
             raise ValueError("num_pages must be >= 1")
         self.num_pages = num_pages
         self.page_size = page_size
+        # telemetry (repro.obs): the engine passes its registry; a bare
+        # allocator gets the shared no-op instruments. Occupancy is
+        # exported as callback gauges so collection always sees live state.
+        m = metrics if metrics is not None else NULL_REGISTRY
+        self._m_alloc = m.counter("alloc_pages_total",
+                                  "pages reserved, by kind", ("kind",))
+        self._m_alloc_shared = self._m_alloc.labels(kind="shared")
+        self._m_alloc_private = self._m_alloc.labels(kind="private")
+        self._m_freed = m.counter("alloc_pages_freed_total",
+                                  "page references released")
+        self._m_evicted = m.counter("alloc_pages_evicted_total",
+                                    "cached pages reclaimed under pressure")
+        self._m_hit = m.counter("alloc_prefix_hit_pages_total",
+                                "cacheable pages served from the index")
+        self._m_miss = m.counter("alloc_prefix_miss_pages_total",
+                                 "cacheable pages allocated private")
+        m.gauge("alloc_pages_in_use", "pages referenced by live requests",
+                fn=lambda: self.used_pages)
+        m.gauge("alloc_pages_cached_evictable",
+                "refcount-0 pages kept for prefix hits",
+                fn=lambda: self.cached_pages)
+        m.gauge("alloc_pages_free", "reclaimable supply (free + evictable)",
+                fn=lambda: self.free_pages)
         # LIFO free list: freshly freed pages are reused first (their planes
         # are still warm in cache on real hardware)
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
@@ -171,10 +196,15 @@ class PageAllocator:
                 del self._index[h]
                 del self._hash[p]
                 self.evictions += 1
+                self._m_evicted.inc()
             self._ref[p] = 1
             pages.append(p)
         self.hits += matched
         self.misses += min(len(hashes), n_pages) - matched
+        self._m_hit.inc(matched)
+        self._m_miss.inc(min(len(hashes), n_pages) - matched)
+        self._m_alloc_shared.inc(matched)
+        self._m_alloc_private.inc(n_pages - matched)
         self._owned[rid] = pages
         return pages, matched
 
@@ -219,6 +249,7 @@ class PageAllocator:
                     self._free.append(p)
             else:
                 self._ref[p] = n - 1
+        self._m_freed.inc(len(pages))
         return len(pages)
 
     def block_table_row(self, rid: int, width: int) -> np.ndarray:

@@ -70,7 +70,17 @@ Architecture (Orca-style iteration-level scheduling):
     shared prefix pages are structurally untouchable). Greedy streams
     stay bit-identical to non-speculative decoding; a round emits 1..k+1
     tokens per model pass (``stats()``: ``accept_rate`` /
-    ``tokens_per_step``). See docs/speculative.md.
+    ``tokens_per_step``). See docs/speculative.md;
+  * OBSERVABILITY is first-class (`repro.obs`, ``obs=ObsConfig(...)``):
+    the engine owns a metrics registry every subsystem (scheduler,
+    allocator, drafter) emits into, and ``stats()`` is computed from it
+    (bit-identical to the historical hand counters); ``ObsConfig(trace=
+    True)`` records per-request lifecycle + per-tick device-step spans as
+    a Perfetto-loadable Chrome trace, and the roofline cost model
+    (`obs.cost`) attributes analytic floor HBM bytes/FLOPs to every tick
+    and request. ``ObsConfig(enabled=False)`` swaps in no-op instruments —
+    telemetry cannot perturb the measured system. See
+    docs/observability.md.
 
 Because every slot's computation is row-independent (attention hard-masks
 invalid cache positions to exact zeros), a request's token stream is
@@ -117,9 +127,11 @@ from repro.launch.sampling import (
     slot_batch,
 )
 from repro.launch.scheduler import FIFOScheduler, Request
-from repro.launch.steps import build_engine_step
+from repro.launch.steps import build_engine_step, engine_step_signature
 from repro.models import init_params, make_cache, model_dims, reset_cache_slot
 from repro.models.common import quantize_params
+from repro.obs import MetricsRegistry, ObsConfig, TraceRecorder, build_cost_model
+from repro.obs.metrics import COUNT_BUCKETS, NULL_REGISTRY, TIME_BUCKETS
 
 
 class ServeEngine:
@@ -132,6 +144,7 @@ class ServeEngine:
                  cache_config: Optional[CacheConfig] = None,
                  prefill_chunk: int = 1, token_budget: Optional[int] = None,
                  speculate_k: int = 0, drafter="ngram",
+                 obs: Optional[ObsConfig] = None,
                  seed: int = 0, params=None, verbose: bool = False):
         cfg = get_config(arch)
         if reduced:
@@ -162,6 +175,14 @@ class ServeEngine:
         if ccfg.paged:
             ccfg = ccfg.sized(capacity=capacity, slots=slots)
         self.cache_cfg = ccfg
+        # observability (repro.obs): one registry per engine, resolved to
+        # the shared no-op instruments when disabled — recording can never
+        # perturb the measured system (bench --obs-check asserts 0% drift)
+        self.obs = obs if obs is not None else ObsConfig()
+        self.metrics = (MetricsRegistry() if self.obs.enabled
+                        else NULL_REGISTRY)
+        self.trace = TraceRecorder(enabled=self.obs.trace_on)
+        self.trace.thread(0, "engine")
         quant = None
         if scheme != "fp16":
             quant = QuantPolicy(scheme=scheme, strategy=strategy, impl=impl,
@@ -186,7 +207,10 @@ class ServeEngine:
             self.cache = make_cache(cfg, slots, capacity, tp=tp,
                                     dtype=jnp.bfloat16,
                                     cache_cfg=ccfg if ccfg.paged else None)
-            self._step, _, _ = build_engine_step(
+            # arg shapes are kept for obs.cost.hlo_step_cost: lowering the
+            # jitted step at its serving shapes yields the compiled
+            # program's achieved per-tick HBM/FLOP cost
+            self._step, self._step_shapes, _ = build_engine_step(
                 self.mesh, cfg, self.rcfg,
                 cache_cfg=ccfg if ccfg.paged else None,
                 chunk=self.step_chunk, sampling=True,
@@ -204,6 +228,7 @@ class ServeEngine:
                     raise TypeError(f"drafter must be a Drafter or name, "
                                     f"got {type(drafter).__name__}")
                 self.drafter = drafter
+                self.drafter.bind_metrics(self.metrics)
             # paged pools need no per-slot reset: positions are written
             # front-to-front per request, so every valid key is fresh, and
             # recurrent-state families are rejected by check_paged_support
@@ -213,7 +238,7 @@ class ServeEngine:
         # host-side slot state
         if ccfg.paged:
             self.alloc: Optional[PageAllocator] = PageAllocator(
-                ccfg.num_pages, ccfg.page_size)
+                ccfg.num_pages, ccfg.page_size, metrics=self.metrics)
             self.block_tables = np.zeros(
                 (slots, ccfg.max_pages_per_seq), np.int32)
             # a request can never outgrow its block-table row or the pool
@@ -222,7 +247,8 @@ class ServeEngine:
             self.alloc = None
             self.block_tables = None
             eff_cap = capacity
-        self.sched = FIFOScheduler(eff_cap, max_queue=max_queue)
+        self.sched = FIFOScheduler(eff_cap, max_queue=max_queue,
+                                   metrics=self.metrics)
         self.active: List[Optional[Request]] = [None] * slots
         self.fed = np.zeros(slots, np.int32)   # inputs consumed == insert pos
         self.last_token = np.zeros(slots, np.int32)
@@ -232,13 +258,89 @@ class ServeEngine:
         self.tick = 0
         self.finished: List[Request] = []
         self._rid = itertools.count()
-        self._tick_s: List[float] = []         # wall seconds per non-idle tick
-        self._tick_tokens: List[int] = []      # tokens generated per tick
-        self._prompt_tokens = 0                # prompt positions admitted
-        self._cached_tokens = 0                # ... served from shared pages
-        self._spec_proposed = 0                # draft tokens scored
-        self._spec_accepted = 0                # ... accepted by the verify
-        self._emit_rounds = 0                  # slot-rounds emitting tokens
+
+        # --- telemetry instruments, resolved ONCE (recording on the tick
+        # path is then a plain float add; all of stats() derives from
+        # these — the two tick histograms keep raw observations in
+        # insertion order so the legacy percentile math is bit-identical)
+        m = self.metrics
+        self.signature = engine_step_signature(
+            cfg, self.rcfg, cache_cfg=ccfg if ccfg.paged else None,
+            chunk=self.step_chunk, speculate_k=self.speculate_k)
+        m.gauge("serve_step_signature_info",
+                "engine-step signature (value is always 1)",
+                tuple(self.signature)).labels(**self.signature).set(1)
+        self._m_tick_s = m.histogram(
+            "serve_tick_seconds", "wall seconds per served (non-idle) tick",
+            buckets=TIME_BUCKETS)
+        self._m_tick_tok = m.histogram(
+            "serve_tick_tokens", "tokens emitted per served tick",
+            buckets=COUNT_BUCKETS)
+        self._m_idle = m.counter("serve_idle_ticks_total",
+                                 "ticks with no active slot")
+        self._m_steps = m.counter("serve_device_steps_total",
+                                  "jitted engine-step invocations")
+        self._m_fed = m.counter("serve_tokens_fed_total",
+                                "input positions fed through the step")
+        self._m_chunk = m.histogram(
+            "serve_chunk_tokens", "tokens fed per active slot per tick",
+            buckets=COUNT_BUCKETS, keep_raw=False)
+        self._m_finished = m.counter("serve_requests_finished_total",
+                                     "finished requests, by reason",
+                                     ("reason",))
+        self._m_fin_stop = self._m_finished.labels(reason="stop")
+        self._m_fin_len = self._m_finished.labels(reason="length")
+        self._m_prompt = m.counter("serve_prompt_tokens_total",
+                                   "prompt positions admitted")
+        self._m_cached = m.counter("serve_cached_prompt_tokens_total",
+                                   "prompt positions served from shared pages")
+        self._m_spec_prop = m.counter("serve_spec_proposed_total",
+                                      "draft tokens scored by the step")
+        self._m_spec_acc = m.counter("serve_spec_accepted_total",
+                                     "draft tokens accepted by the verify")
+        self._m_emit = m.counter("serve_emit_rounds_total",
+                                 "slot-rounds that emitted tokens")
+        self._m_ttft = m.histogram("serve_request_ttft_ticks",
+                                   "submit -> first token, engine ticks",
+                                   buckets=COUNT_BUCKETS)
+        self._m_lat = m.histogram("serve_request_latency_ticks",
+                                  "submit -> finish, engine ticks",
+                                  buckets=COUNT_BUCKETS)
+        self._m_glen = m.histogram("serve_request_gen_tokens",
+                                   "tokens generated per finished request",
+                                   buckets=COUNT_BUCKETS)
+        self._m_active = m.gauge("serve_active_slots",
+                                 "slots serving a request")
+        m.gauge("serve_queue_depth", "requests waiting for a slot",
+                fn=lambda: self.sched.queue_depth)
+
+        # --- roofline attribution (obs.cost): analytic floors for this
+        # step signature; per-tick accounting runs in step()
+        self.cost_model = None
+        if self.obs.cost_on:
+            dims = model_dims(cfg, self.mesh.shape["model"])
+            self.cost_model = build_cost_model(
+                cfg, scheme, ccfg if ccfg.paged else None,
+                kv=dims.kv, hd=dims.hd, tp=self.mesh.shape["model"],
+                signature=self.signature)
+            self._kv_bpt = float(self.kv_bytes_per_token())
+            self._m_floor_b = m.counter(
+                "serve_floor_hbm_bytes_total",
+                "analytic floor HBM bytes (weights + causal KV)")
+            self._m_floor_f = m.counter("serve_floor_flops_total",
+                                        "analytic floor FLOPs")
+            self._m_kv_floor = m.counter(
+                "serve_kv_floor_bytes_total",
+                "causal-floor KV bytes (writes + attended reads)")
+            self._m_kv_ach = m.counter(
+                "serve_kv_achieved_bytes_total",
+                "KV bytes the cache implementation touches")
+
+        # jax.profiler capture of the first obs.jax_profile_ticks served
+        # ticks (XLA-level trace; ObsConfig.jax_profile_dir)
+        self._prof_ticks_left = (self.obs.jax_profile_ticks
+                                 if self.obs.enabled else 0)
+        self._prof_active = False
 
     # ------------------------------------------------------------- frontend
     def submit(self, prompt, max_tokens: Optional[int] = None,
@@ -282,7 +384,17 @@ class ServeEngine:
             # token pages, so VLM/audio requests skip the cache)
             req.page_hashes = prefix_page_hashes(
                 req.prompt, ccfg.page_size, ccfg.content_key)
-        return self.sched.submit(req, self.tick)
+        self.sched.submit(req, self.tick)     # raises on backpressure
+        if self.trace.enabled:
+            # one trace thread per request (tid 0 is the engine): the
+            # request span opens here and closes at finish; "queued" runs
+            # until admission
+            self.trace.thread(rid + 1, f"req {rid}")
+            self.trace.begin(rid + 1, "request",
+                             args={"prompt_len": req.prompt_len,
+                                   "max_tokens": max_tokens})
+            self.trace.begin(rid + 1, "queued")
+        return req
 
     @property
     def has_work(self) -> bool:
@@ -341,10 +453,15 @@ class ServeEngine:
             if paged:
                 self.block_tables[slot] = self.alloc.block_table_row(
                     req.rid, self.block_tables.shape[1])
-                self._prompt_tokens += req.n_prefix + req.prompt_len
-                self._cached_tokens += req.cached_len
+                self._m_cached.inc(req.cached_len)
             else:
                 self.cache = self._reset(self.cache, slot)
+            self._m_prompt.inc(req.n_prefix + req.prompt_len)
+            if self.trace.enabled:
+                self.trace.end(req.rid + 1, "queued",
+                               args={"slot": slot,
+                                     "cached_len": req.cached_len})
+                self.trace.begin(req.rid + 1, "prefill")
             self.active[slot] = req
             # prefill skip: cached pages already hold positions
             # [0, cached_len), so this slot starts feeding there
@@ -364,15 +481,25 @@ class ServeEngine:
         paged = self.cache_cfg.paged
         C = self.step_chunk              # token-buffer width fed to the step
         PC = self.chunk                  # prefill growth cap per slot
+        tracing = self.trace.enabled
         with use_mesh(self.mesh):
             # 1) admit queued requests into free slots (see _admit)
+            if tracing:
+                self.trace.begin(0, "tick", args={"tick": self.tick})
+                self.trace.begin(0, "admit")
             self._admit()
+            if tracing:
+                self.trace.end(0, "admit")
 
             if self.active_count == 0:
                 # idle ticks still advance the engine clock — open-loop
                 # drivers gate future arrivals on eng.tick
                 self.tick += 1
+                self._m_idle.inc()
+                if tracing:
+                    self.trace.end(0, "tick", args={"idle": True})
                 return {"finished": [], "generated": 0, "active": 0}
+            self._m_active.set(self.active_count)
 
             # 2) size each slot's chunk under the global token budget:
             #    every active slot gets 1 guaranteed token; prefilling slots
@@ -405,6 +532,7 @@ class ServeEngine:
                         d = np.asarray(self.drafter.propose(hist, int(k_cap)),
                                        np.int32).reshape(-1)[:k_cap]
                         if d.size:
+                            self.drafter.record_proposal(int(d.size))
                             proposals[s] = d
                             ndraft[s] = d.size
                             n += int(d.size)
@@ -465,25 +593,67 @@ class ServeEngine:
                     args += (jnp.asarray(embeds[:, 0]),
                              jnp.asarray(emask[:, 0]))
             args += ({k: jnp.asarray(v) for k, v in self.samp.items()},)
+            fed = int(nvalid.sum())
+            self._m_steps.inc()
+            self._m_fed.inc(fed)
+            for s in range(self.slots):
+                if self.active[s] is not None:
+                    self._m_chunk.observe(int(nvalid[s]))
+            self._profile_tick_start()
+            if tracing:
+                self.trace.begin(0, "device_step",
+                                 args={"tokens_fed": fed,
+                                       "active": self.active_count})
+            outs = self._step(*args)
+            if tracing:
+                # time the device work to completion — dispatch is
+                # serialized under tracing, so trace runs are for
+                # inspection, never benchmark rows
+                jax.block_until_ready(outs)
+                self.trace.end(0, "device_step")
+            self._profile_tick_end()
             if self.speculate_k:
-                out_tok, n_emit, acc, done, self.cache = self._step(*args)
+                out_tok, n_emit, acc, done, self.cache = outs
                 out_tok = np.asarray(out_tok)
                 n_emit = np.asarray(n_emit)
                 acc = np.asarray(acc)
             else:
-                next_tok, done, self.cache = self._step(*args)
+                next_tok, done, self.cache = outs
                 next_tok = np.asarray(next_tok)
             done = np.asarray(done)
 
             # 5) advance slot state by consumed chunk lengths; collect
             #    sampled tokens; free finished
             finished, generated = [], 0
+            tick_reads = tick_ach = 0        # roofline attribution (obs.cost)
             for s, req in enumerate(self.active):
                 if req is None:
                     continue
                 i = int(self.fed[s])
                 n = int(nvalid[s])
                 self.fed[s] = i + n
+                if self.cost_model is not None:
+                    # causal floor: fed token j attends positions [0, i+j]
+                    # plus its own insert; achieved: the read width the
+                    # cache implementation actually materializes per token
+                    # (dense capacity for contiguous, the full block-table
+                    # row for the paged ref gather, whole touched pages
+                    # for the Pallas kernel)
+                    reads = n * i + n * (n + 1) // 2
+                    if not paged:
+                        ach = n * self.capacity
+                    elif self.cache_cfg.impl == "ref":
+                        ach = n * self.cache_cfg.max_pages_per_seq \
+                            * self.cache_cfg.page_size
+                    else:
+                        ps = self.cache_cfg.page_size
+                        ach = sum(-(-(i + j + 1) // ps) * ps
+                                  for j in range(n))
+                    req.kv_floor_bytes += \
+                        (n + reads) * self.cost_model.kv_bytes_per_token
+                    req.kv_achieved_bytes += (n + ach) * self._kv_bpt
+                    tick_reads += reads
+                    tick_ach += ach
                 if paged and req.page_hashes:
                     # publish full PROMPT pages as prefill crosses their
                     # boundaries: content-addressed, so an identical prefix
@@ -505,8 +675,8 @@ class ServeEngine:
                         a = int(acc[s])
                         emitted = [int(t) for t in out_tok[s, :int(n_emit[s])]]
                         if k_s:
-                            self._spec_proposed += k_s
-                            self._spec_accepted += a
+                            self._m_spec_prop.inc(k_s)
+                            self._m_spec_acc.inc(a)
                             req.drafted += k_s
                             req.accepted_drafts += a
                     else:
@@ -517,9 +687,12 @@ class ServeEngine:
                     self.last_token[s] = tok
                     self.samp["ngen"][s] = len(req.tokens)
                     generated += len(emitted)
-                    self._emit_rounds += 1
+                    self._m_emit.inc()
                     if was_first:
                         req.first_token_tick = self.tick
+                        if tracing:
+                            self.trace.end(req.rid + 1, "prefill")
+                            self.trace.begin(req.rid + 1, "decode")
                     if bool(done[s]):
                         # in-step termination: stop-token hit or length cap
                         req.finish_tick = self.tick
@@ -533,6 +706,18 @@ class ServeEngine:
                         if paged:
                             self.alloc.free(req.rid)
                             self.block_tables[s] = 0
+                        (self._m_fin_stop if req.finish_reason == "stop"
+                         else self._m_fin_len).inc()
+                        self._m_ttft.observe(req.ttft_ticks)
+                        self._m_lat.observe(req.latency_ticks)
+                        self._m_glen.observe(req.n_generated)
+                        if tracing:
+                            self.trace.end(req.rid + 1, "decode")
+                            self.trace.instant(
+                                req.rid + 1, "finished",
+                                args={"reason": req.finish_reason,
+                                      "tokens": req.n_generated})
+                            self.trace.end(req.rid + 1, "request")
                     elif k_s:
                         # ROLLBACK: the step already zero-scattered the
                         # rejected draft entries (positions i+1+a .. i+k_s)
@@ -548,14 +733,29 @@ class ServeEngine:
                             f"(cached {req.cached_len}, prompt end "
                             f"{req.n_prefix + req.prompt_len})")
                         self.fed[s] = new_fed
+            if self.cost_model is not None:
+                cm = self.cost_model
+                self._m_floor_b.inc(cm.tick_floor_bytes(fed, tick_reads))
+                self._m_floor_f.inc(cm.tick_floor_flops(fed, tick_reads))
+                self._m_kv_floor.inc(
+                    (fed + tick_reads) * cm.kv_bytes_per_token)
+                self._m_kv_ach.inc((fed + tick_ach) * self._kv_bpt)
             # freed capacity becomes admission headroom the SAME tick: a
             # stop-token hit admits the queue head before the tick closes
             # (its first chunk runs next tick)
             if finished:
+                if tracing:
+                    self.trace.begin(0, "admit")
                 self._admit()
+                if tracing:
+                    self.trace.end(0, "admit")
         self.tick += 1
-        self._tick_s.append(time.perf_counter() - t0)
-        self._tick_tokens.append(generated)
+        self._m_tick_s.observe(time.perf_counter() - t0)
+        self._m_tick_tok.observe(generated)
+        if tracing:
+            self.trace.counter("engine", {"active": self.active_count,
+                                          "queue": self.sched.queue_depth})
+            self.trace.end(0, "tick", args={"generated": generated})
         return {"finished": finished, "generated": generated,
                 "active": self.active_count}
 
@@ -572,17 +772,38 @@ class ServeEngine:
 
     def reset_metrics(self) -> None:
         """Drop accumulated timing/counter state (e.g. after a jit warmup)
-        without touching in-flight requests or the cache."""
-        self._tick_s = []
-        self._tick_tokens = []
+        without touching in-flight requests or the cache. Registry
+        registrations (and callback gauges) survive — only values zero."""
         self.finished = []
-        self._prompt_tokens = 0
-        self._cached_tokens = 0
-        self._spec_proposed = 0
-        self._spec_accepted = 0
-        self._emit_rounds = 0
+        self.metrics.reset()
         if self.alloc is not None:
             self.alloc.reset_stats()
+
+    # --------------------------------------------------------- obs plumbing
+    @property
+    def _emit_rounds(self) -> int:
+        """Slot-rounds that emitted tokens (registry-backed; the counter
+        behind stats()['tokens_per_step'])."""
+        return int(self._m_emit.value)
+
+    def _profile_tick_start(self) -> None:
+        """Start the optional jax.profiler capture on the first served
+        tick (`ObsConfig.jax_profile_ticks`); disabled on any failure."""
+        if self._prof_ticks_left <= 0 or self._prof_active:
+            return
+        try:
+            jax.profiler.start_trace(self.obs.jax_profile_dir)
+            self._prof_active = True
+        except Exception:              # platform without profiler support
+            self._prof_ticks_left = 0
+
+    def _profile_tick_end(self) -> None:
+        if not self._prof_active:
+            return
+        self._prof_ticks_left -= 1
+        if self._prof_ticks_left <= 0:
+            jax.profiler.stop_trace()
+            self._prof_active = False
 
     # ----------------------------------------------------------- accounting
     def kv_bytes_per_token(self) -> int:
@@ -599,8 +820,17 @@ class ServeEngine:
         return compression_vs_bf16(dims.kv, dims.hd, self.cache_cfg)
 
     def stats(self) -> Dict[str, float]:
-        tick_s = np.asarray(self._tick_s) if self._tick_s else np.zeros(1)
-        tok = np.asarray(self._tick_tokens) if self._tick_tokens else np.zeros(1)
+        """Aggregate serving stats, computed FROM the metrics registry
+        (`repro.obs.metrics`) — the tick histograms keep raw observations
+        in insertion order, so every percentile below is bit-identical to
+        the pre-registry hand-counter implementation (pinned by
+        tests/test_obs.py). With ``ObsConfig(enabled=False)`` the
+        accumulated telemetry reads as zero; pure-state values (kv bytes
+        per token, queue depth) stay real."""
+        raw_s = self._m_tick_s.raw_values()
+        raw_t = self._m_tick_tok.raw_values()
+        tick_s = np.asarray(raw_s) if raw_s else np.zeros(1)
+        tok = np.asarray(raw_t) if raw_t else np.zeros(1)
         total_s = float(tick_s.sum())
         decode_ticks = tick_s[tok > 0]
         # TTFT (submit -> first token) and end-to-end request latency, in
@@ -608,17 +838,19 @@ class ServeEngine:
         # prefill moves (ceil(prompt/C) prefill ticks instead of prompt_len)
         # requests end at VARIABLE lengths (stop tokens): both arrays are
         # per-request actuals, so early exits shorten the percentiles
-        ttft = np.asarray([r.ttft_ticks for r in self.finished
-                           if r.first_token_tick >= 0], np.float64)
-        e2e = np.asarray([r.latency_ticks for r in self.finished], np.float64)
-        glen = np.asarray([r.n_generated for r in self.finished], np.float64)
+        ttft = np.asarray(self._m_ttft.raw_values(), np.float64)
+        e2e = np.asarray(self._m_lat.raw_values(), np.float64)
+        glen = np.asarray(self._m_glen.raw_values(), np.float64)
+        spec_prop = int(self._m_spec_prop.value)
+        spec_acc = int(self._m_spec_acc.value)
+        emit_rounds = int(self._m_emit.value)
 
         def pct(a, q):
             return float(np.percentile(a, q)) if a.size else 0.0
 
         out = {
-            "ticks": len(self._tick_s),
-            "requests_finished": len(self.finished),
+            "ticks": len(raw_s),
+            "requests_finished": int(self._m_finished.total),
             "tokens_generated": int(tok.sum()),
             "tokens_per_s": float(tok.sum() / total_s) if total_s else 0.0,
             "decode_ms_median": (1e3 * float(np.median(decode_ticks))
@@ -632,25 +864,37 @@ class ServeEngine:
             "latency_ticks_p50": pct(e2e, 50),
             "latency_ticks_p99": pct(e2e, 99),
             "gen_tokens_mean": float(glen.mean()) if glen.size else 0.0,
-            "stopped_early": sum(r.finish_reason == "stop"
-                                 for r in self.finished),
+            "stopped_early": int(self._m_fin_stop.value),
             "queue_depth": self.sched.queue_depth,
             "kv_bytes_per_token": self.kv_bytes_per_token(),
             "kv_compression_vs_bf16": self.kv_compression_vs_bf16(),
             # speculative decoding: drafts scored / accepted, and tokens
             # emitted per emitting slot-round (1.0 when not speculating —
             # every emission is a single draw)
-            "spec_proposed": self._spec_proposed,
-            "spec_accepted": self._spec_accepted,
-            "accept_rate": (self._spec_accepted / self._spec_proposed
-                            if self._spec_proposed else 0.0),
-            "tokens_per_step": (float(tok.sum()) / self._emit_rounds
-                                if self._emit_rounds else 0.0),
+            "spec_proposed": spec_prop,
+            "spec_accepted": spec_acc,
+            "accept_rate": spec_acc / spec_prop if spec_prop else 0.0,
+            "tokens_per_step": (float(tok.sum()) / emit_rounds
+                                if emit_rounds else 0.0),
         }
         if self.alloc is not None:
             out["free_pages"] = self.alloc.free_pages
             out.update(self.alloc.stats())
+            prompt_toks = self._m_prompt.value
             out["cached_token_frac"] = (
-                self._cached_tokens / self._prompt_tokens
-                if self._prompt_tokens else 0.0)
+                self._m_cached.value / prompt_toks if prompt_toks else 0.0)
+        if self.cost_model is not None:
+            # roofline attribution (obs.cost; full report: obs.attribution)
+            cm = self.cost_model
+            measured = float(out["kv_bytes_per_token"])
+            kv_floor = self._m_kv_floor.value
+            kv_ach = self._m_kv_ach.value
+            out["kv_bytes_per_token_floor"] = cm.kv_bytes_per_token
+            out["kv_bytes_per_token_ideal"] = cm.kv_ideal_bytes_per_token
+            out["kv_floor_ratio"] = measured / cm.kv_bytes_per_token
+            out["kv_vs_ideal_floor"] = measured / cm.kv_ideal_bytes_per_token
+            out["kv_achieved_vs_floor"] = (kv_ach / kv_floor
+                                           if kv_floor else 0.0)
+            out["floor_hbm_bytes"] = self._m_floor_b.value
+            out["floor_flops"] = self._m_floor_f.value
         return out

@@ -30,6 +30,7 @@ from typing import Callable, Deque, List, Optional, Tuple
 import numpy as np
 
 from repro.launch.sampling import GREEDY, SamplingParams
+from repro.obs.metrics import NULL_REGISTRY
 
 
 @dataclasses.dataclass
@@ -71,6 +72,12 @@ class Request:
     cached_len: int = 0    # positions served from shared pages at admission;
     #                        prefill starts at this position (prefill skip)
     published: int = 0     # prompt pages published to the prefix index so far
+
+    # roofline attribution (engine-filled when ObsConfig.cost — see
+    # repro.obs.cost): KV bytes this request's served tokens account for,
+    # at the analytic floor vs what the cache implementation touches
+    kv_floor_bytes: float = 0.0
+    kv_achieved_bytes: float = 0.0
 
     def __post_init__(self):
         # the [P] int32 contract above is load-bearing: the engine feeds
@@ -122,6 +129,15 @@ class Request:
         return self.first_token_tick - self.first_step_tick + 1
 
     @property
+    def kv_vs_floor(self) -> float:
+        """KV read/write amplification for this request: bytes the cache
+        implementation touched over the causal floor (0.0 until served
+        with cost accounting on)."""
+        if self.kv_floor_bytes <= 0:
+            return 0.0
+        return self.kv_achieved_bytes / self.kv_floor_bytes
+
+    @property
     def latency_ticks(self) -> int:
         """Submit -> finish, in engine ticks (queueing included; -1 while
         in flight)."""
@@ -138,10 +154,24 @@ class FIFOScheduler:
     raises, which is the backpressure signal a frontend would surface as 429.
     """
 
-    def __init__(self, capacity: int, max_queue: Optional[int] = None):
+    def __init__(self, capacity: int, max_queue: Optional[int] = None,
+                 metrics=None):
         self.capacity = capacity
         self.max_queue = max_queue
         self._queue: Deque[Request] = deque()
+        # telemetry (repro.obs): the engine passes its registry; a bare
+        # scheduler gets the shared no-op instruments
+        m = metrics if metrics is not None else NULL_REGISTRY
+        self._m_submitted = m.counter(
+            "sched_requests_submitted_total", "requests accepted into the queue")
+        self._m_rejected = m.counter(
+            "sched_requests_rejected_total",
+            "queue-full backpressure rejections (submit raised)")
+        self._m_admitted = m.counter(
+            "sched_requests_admitted_total", "requests placed into slots")
+        self._m_blocked = m.counter(
+            "sched_admit_blocked_total",
+            "head-of-line blocks: the queue head failed the fits() gate")
 
     def submit(self, req: Request, tick: int) -> Request:
         if req.max_tokens < 1:
@@ -155,10 +185,12 @@ class FIFOScheduler:
                 f"{req.max_tokens} tokens - 1) but slot capacity is "
                 f"{self.capacity}")
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self._m_rejected.inc()
             raise RuntimeError(
                 f"queue full ({self.max_queue}); request {req.rid} rejected")
         req.submit_tick = tick
         self._queue.append(req)
+        self._m_submitted.inc()
         return req
 
     def admit(self, free_slots: List[int], tick: int,
@@ -189,11 +221,13 @@ class FIFOScheduler:
             if max_admit is not None and len(placed) >= max_admit:
                 break
             if fits is not None and not fits(self._queue[0]):
+                self._m_blocked.inc()
                 break
             req = self._queue.popleft()
             req.admit_tick = tick
             req.slot = slot
             placed.append((slot, req))
+        self._m_admitted.inc(len(placed))
         return placed
 
     @property

@@ -72,9 +72,25 @@ class Drafter:
     proposals, and replay determinism of seeded streams depends on it."""
 
     name = "drafter"
+    _m_proposed = None        # per-drafter proposal counter (bind_metrics)
 
     def propose(self, history: np.ndarray, k: int) -> np.ndarray:
         raise NotImplementedError
+
+    def bind_metrics(self, registry) -> None:
+        """Attach an `obs.MetricsRegistry`: proposals are counted per
+        drafter name, so mixed-drafter deployments stay attributable.
+        The engine binds its registry at construction."""
+        self._m_proposed = registry.counter(
+            "spec_drafter_proposed_total",
+            "draft tokens proposed, by drafter", ("drafter",)
+        ).labels(drafter=self.name)
+
+    def record_proposal(self, n: int) -> None:
+        """Called by the engine for each accepted-into-the-step proposal
+        block (no-op until bind_metrics)."""
+        if self._m_proposed is not None:
+            self._m_proposed.inc(n)
 
 
 class NgramDrafter(Drafter):

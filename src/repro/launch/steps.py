@@ -487,6 +487,25 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
     return jitted, arg_shapes, shardings
 
 
+def engine_step_signature(cfg: ModelConfig, rcfg: RunConfig, cache_cfg=None,
+                          chunk: int = 1, speculate_k: int = 0):
+    """Canonical identity of one jitted engine-step program — the key the
+    obs subsystem attributes per-tick cost under (`obs.cost`) and the
+    label set exported on ``serve_step_signature_info``. Two engines with
+    equal signatures compile the same step: cache mode x chunk x
+    speculate_k x weight scheme x slot count."""
+    return dict(
+        arch=cfg.name,
+        scheme=rcfg.quant.scheme if rcfg.quantized else "fp16",
+        cache=cache_cfg.kind if cache_cfg is not None else "contiguous",
+        kv_scheme=(cache_cfg.kv_scheme
+                   if cache_cfg is not None and cache_cfg.quantized else "bf16"),
+        slots=rcfg.global_batch,
+        chunk=chunk,
+        speculate_k=speculate_k,
+    )
+
+
 def build_step(mesh, cfg: ModelConfig, rcfg: RunConfig):
     if rcfg.mode == "train":
         return build_train_step(mesh, cfg, rcfg)

@@ -1,0 +1,53 @@
+"""Observability configuration for the serving engine.
+
+One `ObsConfig` selects how much telemetry the engine records, in the same
+frozen-dataclass style as `cache.CacheConfig`:
+
+  * ``enabled=True``  (default) — the engine creates a live
+    `MetricsRegistry` and emits counters/gauges/histograms on every tick;
+    `ServeEngine.stats()` is computed from the registry. Recording is a
+    handful of float adds per tick on pre-resolved instruments, so the
+    measured system is not perturbed (asserted by the bench
+    ``--obs-check`` run and tests/test_obs.py).
+  * ``enabled=False`` — every instrument is the shared no-op
+    `NULL_REGISTRY` child: call sites stay branch-free and accumulated
+    telemetry reads as zero. Pure-state stats (kv bytes/token, queue
+    depth) remain real.
+  * ``trace=True`` — additionally record per-request lifecycle spans and
+    per-tick device-step spans (`obs.trace.TraceRecorder`). Device-step
+    spans are timed via ``jax.block_until_ready``, which SERIALIZES
+    dispatch — tracing is for inspection runs, not benchmark rows.
+  * ``cost=True`` (default) — attach the analytic roofline cost model
+    (`obs.cost.StepCostModel`) and accumulate per-tick / per-request
+    floor-vs-achieved HBM byte accounting.
+  * ``jax_profile_ticks=N`` — capture the first N served ticks with
+    ``jax.profiler`` into ``jax_profile_dir`` (XLA-level trace; loads in
+    TensorBoard/Perfetto). 0 disables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """How much telemetry the serving engine records."""
+
+    enabled: bool = True        # master switch: False -> no-op instruments
+    trace: bool = False         # record lifecycle + device-step spans
+    cost: bool = True           # roofline floor/achieved byte accounting
+    jax_profile_ticks: int = 0  # capture the first N served ticks
+    jax_profile_dir: str = "/tmp/repro_jax_trace"
+
+    def __post_init__(self):
+        if self.jax_profile_ticks < 0:
+            raise ValueError("jax_profile_ticks must be >= 0")
+
+    @property
+    def trace_on(self) -> bool:
+        return self.enabled and self.trace
+
+    @property
+    def cost_on(self) -> bool:
+        return self.enabled and self.cost

@@ -1,0 +1,183 @@
+"""Roofline-attributed serving cost: analytic floors per engine tick.
+
+The paper's decode speedup is MEMORY-bound — fewer HBM bytes per emitted
+token, not fewer FLOPs — so the honest continuously-measured metric is
+"bytes the engine moved vs the analytic floor for the work it did". This
+module computes, per engine-step signature (cache mode x chunk x
+speculate_k, see `launch.steps.engine_step_signature`):
+
+  * a `StepCostModel` of analytic per-token costs built from
+    `analysis.roofline.param_count` (same MODEL_FLOPS convention: 2 x
+    active params per token) plus the KV floors below;
+  * per-tick floor HBM bytes / FLOPs for the tokens the tick actually fed
+    and the causal positions it attended (the engine accumulates these
+    into the registry and onto each `Request`);
+  * optionally, the ACHIEVED per-tick cost of the compiled step program
+    (`hlo_step_cost`: lower + compile the jitted step, parse with
+    `analysis.hlo_cost.module_cost`).
+
+Two KV floors, deliberately distinct (docs/observability.md discusses how
+to read the ratio between them):
+
+  * `kv_vector_bytes_floor` — the FORMAT floor: bytes one packed K or V
+    vector occupies under the AMS page layout (4-bit hi-code plane packed
+    two per byte, shared-LSB bitplane in 32-bit words, one f32 scale per
+    (token, head) vector), with the head dim padded to lcm(k, 2). This is
+    derived here from the scheme parameters, INDEPENDENTLY of
+    `repro.cache` — tests cross-check it against the pool's measured
+    `pool_bytes_per_token`, so layout drift in either trips a test.
+  * `kv_vector_bytes_ideal` — the PAPER floor: head_dim x effective_bits
+    / 8 + the f32 scale, ignoring padding and word granularity. The
+    format floor converges to it as head_dim grows (equal at
+    head_dim = 128 for fp4.25-e2m2); at the reduced test dims the gap is
+    the measured padding overhead, reported as ``kv_vs_ideal_floor``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.analysis.roofline import HBM_BW, PEAK_FLOPS, param_count
+from repro.core.formats import SCHEMES, AMSFormat, get_scheme
+
+
+# ------------------------------------------------------------- KV floors
+def kv_vector_bytes_floor(hd: int, scheme: AMSFormat) -> int:
+    """FORMAT floor: bytes per packed K or V vector of `hd` elements.
+
+    hi-code plane: (total_bits - 1) bits per element, byte-packed over the
+    head dim padded to lcm(k, 2) (4-bit codes -> two per byte); LSB plane:
+    one shared bit per k-group, in 32-bit words; scale: one f32 per
+    vector. Must equal the pool layout's `cache.pool.pool_bytes_per_token`
+    per vector — asserted by tests/test_obs.py.
+    """
+    unit = math.lcm(scheme.k, 2)
+    hd_p = -(-hd // unit) * unit
+    hi = -(-hd_p * (scheme.base.total_bits - 1) // 8)
+    lsb = 4 * (-(-(hd_p // scheme.k) // 32))
+    return hi + lsb + 4
+
+
+def kv_vector_bytes_ideal(hd: int, scheme: AMSFormat) -> float:
+    """PAPER floor: effective_bits per element + the f32 scale, no padding
+    or word granularity. effective_bits = (total_bits - 1) + 1/k."""
+    return hd * scheme.effective_bits / 8.0 + 4.0
+
+
+# ------------------------------------------------------------ cost model
+@dataclasses.dataclass
+class StepCostModel:
+    """Analytic per-token costs of one engine-step signature."""
+
+    signature: Dict[str, object]
+    weight_bytes: float            # packed weight working set (read per tick)
+    flops_per_token: float         # 2 x active params (roofline convention)
+    attn_flops_per_pos: float      # QK + AV per (query token, key position)
+    kv_bytes_per_token: float      # FORMAT floor, K+V, all layers
+    kv_ideal_bytes_per_token: float  # PAPER floor, K+V, all layers
+    kv_bf16_bytes_per_token: float   # the bf16 baseline the paper divides by
+
+    def tick_floor_bytes(self, tokens_fed: int, positions_read: int) -> float:
+        """Floor HBM traffic of one tick: every weight byte once, plus one
+        KV write per fed token and one KV read per attended position."""
+        return (self.weight_bytes
+                + (tokens_fed + positions_read) * self.kv_bytes_per_token)
+
+    def tick_floor_flops(self, tokens_fed: int, positions_read: int) -> float:
+        return (self.flops_per_token * tokens_fed
+                + self.attn_flops_per_pos * positions_read)
+
+    def step_time_floor_s(self, tokens_fed: int, positions_read: int) -> float:
+        """Roofline time floor of one tick on the reference device
+        (`analysis.roofline` PEAK_FLOPS / HBM_BW constants)."""
+        return max(self.tick_floor_bytes(tokens_fed, positions_read) / HBM_BW,
+                   self.tick_floor_flops(tokens_fed, positions_read)
+                   / PEAK_FLOPS)
+
+
+def build_cost_model(cfg, scheme: str, cache_cfg=None, *,
+                     kv: Optional[int] = None, hd: Optional[int] = None,
+                     tp: int = 1,
+                     signature: Optional[Dict[str, object]] = None,
+                     ) -> StepCostModel:
+    """Cost model for one engine configuration. ``scheme`` is the WEIGHT
+    scheme ("fp16" = unquantized bf16 weights); ``cache_cfg`` selects the
+    KV floors (None / contiguous / paged_bf16 -> bf16 KV). ``kv``/``hd``
+    override the config's KV-head geometry with the engine's served dims
+    (`models.model_dims` pads heads under tensor parallelism)."""
+    pc = param_count(cfg)
+    wbits = SCHEMES[scheme].effective_bits if scheme in SCHEMES else 16.0
+    kv = cfg.num_kv_heads if kv is None else kv
+    hd = cfg.head_dim if hd is None else hd
+    bf16_tok = 2 * kv * (2 * hd)
+    if cache_cfg is not None and getattr(cache_cfg, "quantized", False):
+        fmt = get_scheme(cache_cfg.kv_scheme)
+        kv_tok = 2 * kv * kv_vector_bytes_floor(hd, fmt)
+        kv_ideal = 2 * kv * kv_vector_bytes_ideal(hd, fmt)
+    else:
+        kv_tok = float(bf16_tok)
+        kv_ideal = float(bf16_tok)
+    return StepCostModel(
+        signature=dict(signature or {}),
+        weight_bytes=pc["total"] * wbits / 8.0 / tp,
+        flops_per_token=2.0 * pc["active"],
+        attn_flops_per_pos=4.0 * cfg.num_heads * hd,
+        kv_bytes_per_token=cfg.num_layers * kv_tok,
+        kv_ideal_bytes_per_token=cfg.num_layers * kv_ideal,
+        kv_bf16_bytes_per_token=cfg.num_layers * float(bf16_tok),
+    )
+
+
+# --------------------------------------------------- achieved (compiled)
+def hlo_step_cost(jitted, arg_shapes: Dict[str, object]) -> Dict[str, float]:
+    """Per-tick cost of the COMPILED engine step: lower the jitted step at
+    its serving shapes, compile, and parse the optimized HLO with
+    `analysis.hlo_cost.module_cost`. This is the achieved side of the
+    roofline — what the program actually moves, XLA copies included —
+    against which `StepCostModel.tick_floor_*` is the floor. Compiling
+    costs seconds; bench exposes it behind ``--hlo-cost``."""
+    from repro.analysis.hlo_cost import module_cost
+    txt = jitted.lower(*arg_shapes.values()).compile().as_text()
+    c = module_cost(txt)
+    return {"hlo_flops_per_tick": float(c.flops),
+            "hlo_hbm_bytes_per_tick": float(c.hbm_bytes)}
+
+
+def attribution(eng, hlo: bool = False) -> Dict[str, object]:
+    """Run-level achieved-vs-floor report from an engine's registry.
+
+    ``kv_achieved_vs_floor`` is the KV READ/WRITE AMPLIFICATION: bytes the
+    cache implementation actually touches (dense-width gathers included)
+    over the causal floor — ~1 for the Pallas paged kernel, capacity /
+    mean_len for the contiguous cache. With ``hlo=True`` also compiles
+    the step and reports its parsed per-tick cost."""
+    m = eng.metrics
+    cm = eng.cost_model
+    measured = float(eng.kv_bytes_per_token())
+    ticks = m.value("serve_device_steps_total")
+    floor_b = m.value("serve_floor_hbm_bytes_total")
+    kv_floor = m.value("serve_kv_floor_bytes_total")
+    kv_ach = m.value("serve_kv_achieved_bytes_total")
+    out: Dict[str, object] = {
+        "signature": dict(cm.signature),
+        "kv_bytes_per_token": measured,
+        "kv_bytes_per_token_floor": cm.kv_bytes_per_token,
+        "kv_bytes_per_token_ideal": cm.kv_ideal_bytes_per_token,
+        "kv_floor_ratio": measured / cm.kv_bytes_per_token,
+        "kv_vs_ideal_floor": measured / cm.kv_ideal_bytes_per_token,
+        "served_ticks": ticks,
+        "floor_hbm_bytes_total": floor_b,
+        "floor_flops_total": m.value("serve_floor_flops_total"),
+        "kv_floor_bytes_total": kv_floor,
+        "kv_achieved_bytes_total": kv_ach,
+        "kv_achieved_vs_floor": kv_ach / kv_floor if kv_floor else 0.0,
+        "floor_hbm_bytes_per_tick": floor_b / ticks if ticks else 0.0,
+    }
+    if hlo:
+        out.update(hlo_step_cost(eng._step, eng._step_shapes))
+        if ticks:
+            out["hlo_hbm_vs_floor"] = (out["hlo_hbm_bytes_per_tick"]
+                                       / out["floor_hbm_bytes_per_tick"])
+    return out
