@@ -6,7 +6,11 @@ experiments/bench_results.txt):
     Table 2 / Fig.3 / Fig.5  -> bench_formats_accuracy (CE + weight-MSE proxy)
     §3.1 Adaptive Searching  -> bench_adaptive_search
     Table 3 / Fig.6          -> bench_kernel_speedup (analytic Table-3 model
-                                + CPU wall-clock plumbing check)
+                                + CPU wall-clock plumbing check; the
+                                ``kernel_attn/`` rows compare fused-template
+                                vs ref achieved KV bytes per cache scheme
+                                and hard-assert the fused path never
+                                materializes dequantized pages in HBM)
     Serving (beyond-paper)   -> bench_serving (fp16 vs AMS engine throughput
                                 under one Poisson workload: contiguous,
                                 paged, chunked-prefill, shared-prefix
@@ -98,6 +102,12 @@ GATED = {
     # emitting round is a real speculation regression
     "accept_rate": ("lower", 0.15),
     "tokens_per_step": ("lower", 0.15),
+    # kernel_attn rows (fused template vs ref, StepCostModel accounting —
+    # exact analytic bytes): more achieved bytes per causal-floor byte is a
+    # lowering regression, and ANY dequant_kb on a fused row means packed
+    # pages got re-materialized in HBM (baseline pins it at 0)
+    "kv_vs_floor": ("higher", 0.15),
+    "dequant_kb": ("higher", 0.15),
     # NOT gated: anything wall-clock-derived. Even the AMS/fp16 speedup
     # ratio x (machine speed divides out) swings >2x between modes of one
     # --quick run on CPU — the workload is far too small to time reliably.
@@ -106,12 +116,17 @@ GATED = {
 }
 
 
+GATED_PREFIXES = ("serving/", "kernel_attn/")
+
+
 def parse_rows(lines):
-    """'name,us_per_call,k=v k=v ...' -> {name: {k: float}} (serving rows)."""
+    """'name,us_per_call,k=v k=v ...' -> {name: {k: float}} (gated rows:
+    serving + the fused-attention accounting rows)."""
     rows = {}
     for ln in lines:
         ln = ln.strip()
-        if not ln or ln.startswith("#") or not ln.startswith("serving/"):
+        if not ln or ln.startswith("#") \
+                or not ln.startswith(GATED_PREFIXES):
             continue
         name, _, rest = ln.split(",", 2)
         fields = {}
@@ -192,6 +207,10 @@ def main() -> None:
     print("# === kernel speedup (paper Table 3) ===", flush=True)
     bench_kernel_speedup.run(out_lines)
 
+    print("# === fused attention template: achieved KV bytes vs ref ===",
+          flush=True)
+    bench_kernel_speedup.run_attention(out_lines)
+
     print("# === serving: contiguous vs paged vs chunked vs shared-prefix "
           "vs speculative ===", flush=True)
     from benchmarks import bench_serving
@@ -214,13 +233,15 @@ def main() -> None:
           f"({len(out_lines)} rows -> experiments/bench_results.txt)")
 
     if args.write_baseline:
-        serving = [ln for ln in out_lines if ln.startswith("serving/")]
+        serving = [ln for ln in out_lines
+                   if ln.startswith(GATED_PREFIXES)]
         with open(args.write_baseline, "w") as f:
-            f.write("# bench regression baseline — serving rows of a --quick "
-                    "sweep.\n# Gated metrics (see benchmarks/run.py GATED): "
-                    "ticks, ttft/latency tick\n# percentiles, "
-                    "kv_bytes_per_token — deterministic given the seed; "
-                    "15% tolerance.\n"
+            f.write("# bench regression baseline — serving + kernel_attn "
+                    "rows of a --quick sweep.\n# Gated metrics (see "
+                    "benchmarks/run.py GATED): ticks, ttft/latency tick\n"
+                    "# percentiles, kv_bytes_per_token, kv_vs_floor, "
+                    "dequant_kb — deterministic\n# given the seed; 15% "
+                    "tolerance (dequant_kb=0 rows pin exactly).\n"
                     "# Regenerate: python -m benchmarks.run --quick "
                     "--write-baseline benchmarks/baseline.csv\n")
             f.write("\n".join(serving) + "\n")

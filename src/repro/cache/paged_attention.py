@@ -1,146 +1,38 @@
-"""Pallas TPU paged-attention decode kernel over AMS-packed (or bf16) pages.
+"""Paged-attention decode over AMS-packed (or bf16) pages — template shim.
 
-One grid step attends one (slot, kv-head, page) cell; a ragged chunked-
-prefill block ([B, c, H, hd] queries with per-query lengths) folds its c
-queries into the row dimension of the same cell, so multi-token prefill
-and single-token decode run the identical grid:
+The kernel that used to live here (grid (slot, kv-head, page), block table
++ ragged per-query lengths on scalar prefetch, in-VREG e2m2 restoration,
+online-softmax scratch across the page dim) is now ONE INSTANTIATION of
+the fused attention template — see `repro.kernels.attention_template`,
+which the contiguous GQA/MLA decode cores lower through as well. This
+module keeps the `CacheConfig`-facing entry point (`cache/__init__.py`
+dispatches here for impl "pallas"/"pallas_interpret") and re-exports the
+in-kernel helpers for their historical import path.
 
-  * the block table rides SCALAR PREFETCH (`pltpu.PrefetchScalarGridSpec`),
-    so each page's BlockSpec index_map dereferences
-    ``block_table[b, i]`` BEFORE the kernel body runs — the grid pipeline
-    DMAs exactly the pages the slot owns, in logical order, straight from
-    the pool in HBM (this is the "walk the block table" step);
-  * for AMS pools the packed planes (hi nibbles / shared-LSB words /
-    per-(token, head) scales) are restored to exact lattice values in VREGs
-    with the same SHIFT/AND/OR sequence as the weight kernel
-    (`repro.kernels.ams_matmul.decode_codes_to_f32`) — pages are
-    dequantized ON THE FLY inside the attention loop, never materialized
-    in HBM;
-  * a running online-softmax (m, l, acc) lives in VMEM scratch across the
-    page grid dimension (innermost, "arbitrary"); keys at positions >= the
-    slot's length get the additive -2e30 mask from `blockwise_attention`,
-    so idle slots (length <= 0) flush to exact zeros.
-
-The kernel iterates every block-table column; pages past a short request's
-last page are fully masked compute (cheap at decode block sizes — a
-length-bounded grid via scalar-prefetched page counts is the obvious next
-tuning step). f32 score/accumulator math throughout, so the only deviation
-from the `cache.ref` oracle is f32 reduction order.
-
-`interpret=True` runs the exact same kernel on CPU (tier-1 tests); scratch
-and block shapes here are sized for correctness-first small-model decode —
-lane-width padding for odd head dims is left to Mosaic.
+Behavioral contract is unchanged and pinned by tests/test_paged_cache.py:
+lattice-exact vs the `cache.ref` gather-dequantize oracle up to f32
+reduction order, exact zeros for idle slots.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.formats import get_scheme
-from repro.core.kv_quant import codes_from_planes, packed_head_dim
-# _CompilerParams: the CompilerParams/TPUCompilerParams rename shim
-from repro.kernels.ams_matmul import _CompilerParams, decode_codes_to_f32
+# re-exports: these helpers lived here before the template unification
+from repro.kernels.attention_template import (  # noqa: F401
+    NEG_BIG,
+    NEG_CLAMP,
+    fused_paged_attention,
+    online_softmax_step,
+    restore_page,
+    row_lengths,
+)
 
 from .config import CacheConfig
 
-NEG_BIG = -2e30   # additive mask; exp(NEG_BIG - NEG_CLAMP) == 0 exactly
-NEG_CLAMP = -1e30
 
-
-# --------------------------------------------------------------- in-kernel
-def _restore_page(hi, lsb, scale, fmt, k: int, page: int, hd_p: int,
-                  hd: int) -> jnp.ndarray:
-    """Packed planes of one (page, kv-head) cell -> [page, hd] f32 lattice
-    values. hi: [page, hd_p//2] int8, lsb: [page, gw] int32, scale [page, 1].
-    """
-    codes = codes_from_planes(hi, lsb, k)
-    vals = decode_codes_to_f32(codes, fmt) * scale
-    return vals[:, :hd]
-
-
-def _row_lengths(len_ref, b, c: int, g: int):
-    """Per-ROW valid-key counts [c*g, 1] for a chunked query block: the
-    flattened lengths ride scalar prefetch as [B*c]; row r of the (c, g)-
-    folded query block belongs to query r // g. c and g are static, so the
-    gather is c scalar SMEM reads."""
-    lv = jnp.stack([len_ref[b * c + j] for j in range(c)])      # [c]
-    return jnp.repeat(lv, g, total_repeat_length=c * g)[:, None]
-
-
-def _online_softmax_step(qf, k_page, v_page, length, i, nb, o_ref,
-                         acc_ref, m_ref, l_ref, *, page: int, hd: int,
-                         pv_dtype=jnp.float32):
-    """One page of flash-decode accumulation. qf [rows, hd] f32 (pre-scaled;
-    rows = chunk*group for ragged blocks), k_page/v_page [page, hd] f32,
-    ``length`` a scalar or per-row [rows, 1] valid-key count. ``pv_dtype``
-    mirrors flash_decode's ``p.astype(v.dtype)`` before the PV product
-    (bf16 pools cast, AMS lattice values stay f32) so the oracle and the
-    kernel round alike."""
-    @pl.when(i == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_CLAMP)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    s = jax.lax.dot_general(qf, k_page, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # [g, page]
-    k_pos = i * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
-    s = s + jnp.where(k_pos < length, 0.0, NEG_BIG)
-
-    m_prev = m_ref[:, :1]                                  # [g, 1]
-    l_prev = l_ref[:, :1]
-    m_new = jnp.maximum(jnp.maximum(m_prev, s.max(axis=-1, keepdims=True)),
-                        NEG_CLAMP)
-    p = jnp.exp(s - m_new)                                 # masked -> exact 0
-    corr = jnp.exp(m_prev - m_new)
-    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-        p.astype(pv_dtype), v_page.astype(pv_dtype), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
-    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
-
-    @pl.when(i == nb - 1)
-    def _done():
-        l = l_ref[:, :1]
-        out = acc_ref[...] / jnp.maximum(l, 1e-20)
-        o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
-
-
-def _kernel_bf16(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                 acc_ref, m_ref, l_ref, *, page: int, hd: int, nb: int,
-                 chunk: int, g: int, pv_dtype):
-    b, i = pl.program_id(0), pl.program_id(2)
-    qf = q_ref[0, 0].astype(jnp.float32)
-    k_page = k_ref[0, :, 0, :].astype(jnp.float32)
-    v_page = v_ref[0, :, 0, :].astype(jnp.float32)
-    _online_softmax_step(qf, k_page, v_page, _row_lengths(len_ref, b, chunk, g),
-                         i, nb, o_ref, acc_ref, m_ref, l_ref, page=page,
-                         hd=hd, pv_dtype=pv_dtype)
-
-
-def _kernel_ams(bt_ref, len_ref, q_ref, khi_ref, klsb_ref, kscale_ref,
-                vhi_ref, vlsb_ref, vscale_ref, o_ref, acc_ref, m_ref, l_ref,
-                *, fmt, k_share: int, page: int, hd_p: int, hd: int, nb: int,
-                chunk: int, g: int):
-    b, i = pl.program_id(0), pl.program_id(2)
-    qf = q_ref[0, 0].astype(jnp.float32)
-    k_page = _restore_page(khi_ref[0, :, 0, :], klsb_ref[0, :, 0, :],
-                           kscale_ref[0, :, 0, :], fmt, k_share, page, hd_p, hd)
-    v_page = _restore_page(vhi_ref[0, :, 0, :], vlsb_ref[0, :, 0, :],
-                           vscale_ref[0, :, 0, :], fmt, k_share, page, hd_p, hd)
-    _online_softmax_step(qf, k_page, v_page, _row_lengths(len_ref, b, chunk, g),
-                         i, nb, o_ref, acc_ref, m_ref, l_ref, page=page, hd=hd)
-
-
-# ------------------------------------------------------------ pallas_call
 def paged_attention_pallas(
     q: jnp.ndarray,              # [B, H, hd] or [B, c, H, hd] UNSCALED
     pool,                        # layer pool (cache.pool layout)
@@ -152,84 +44,12 @@ def paged_attention_pallas(
     scale: Optional[float] = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Paged flash-decode. Requires the group-major GQA head layout (the
-    only layout the model zoo emits — see `kv_index_map`). Returns q's
-    shape in q.dtype. A chunked query block folds its c queries into the
-    row dimension of one grid cell ([c*g, hd] per kv head) so the ragged
-    multi-token step still runs ONE kernel; per-query lengths ride the
-    same scalar-prefetch stream as the block table."""
-    chunked = q.ndim == 4
-    if not chunked:
-        q = q[:, None]
-        lengths = jnp.asarray(lengths, jnp.int32)[:, None]
-    B, c, H, hd = q.shape
-    kv = jax.tree.leaves(pool["k"])[0].shape[2]
-    if H % kv != 0:
-        raise ValueError(f"H={H} not grouped over kv={kv}")
-    g = H // kv
-    rows = c * g
-    page = ccfg.page_size
-    nb = block_table.shape[1]
-    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
-
-    # scale in q.dtype first — the exact rounding flash_decode applies
-    qf = (q * np.float32(scale).astype(q.dtype)).astype(jnp.float32)
-    # [B, c, kv, g, hd] -> [B, kv, c, g, hd]: chunk-major rows per kv head
-    qf = qf.reshape(B, c, kv, g, hd).transpose(0, 2, 1, 3, 4)
-    qf = qf.reshape(B, kv, rows, hd)
-    bt_flat = block_table.reshape(-1).astype(jnp.int32)
-    lengths = jnp.asarray(lengths, jnp.int32).reshape(-1)     # [B*c]
-
-    # index maps: scalar-prefetch refs arrive after the grid indices
-    q_spec = pl.BlockSpec((1, 1, rows, hd), lambda b, h, i, bt, ln: (b, h, 0, 0))
-    out_spec = pl.BlockSpec((1, 1, rows, hd), lambda b, h, i, bt, ln: (b, h, 0, 0))
-
-    def page_spec(block_tail):
-        return pl.BlockSpec(
-            (1, page) + block_tail,
-            lambda b, h, i, bt, ln: (bt[b * nb + i], 0, h) + (0,) * (len(block_tail) - 1))
-
-    scratch = [pltpu.VMEM((rows, hd), jnp.float32),     # acc
-               pltpu.VMEM((rows, 128), jnp.float32),    # m (col 0 live)
-               pltpu.VMEM((rows, 128), jnp.float32)]    # l (col 0 live)
-    grid = (B, kv, nb)
-    params_kw = dict(
-        out_shape=jax.ShapeDtypeStruct((B, kv, rows, hd), jnp.float32),
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )
-
-    if ccfg.quantized:
-        scheme = get_scheme(ccfg.kv_scheme)
-        hd_p = packed_head_dim(hd, scheme)
-        gw = pool["k"]["lsb"].shape[-1]
-        kernel = functools.partial(
-            _kernel_ams, fmt=scheme.base, k_share=scheme.k, page=page,
-            hd_p=hd_p, hd=hd, nb=nb, chunk=c, g=g)
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2, grid=grid,
-            in_specs=[q_spec,
-                      page_spec((1, hd_p // 2)), page_spec((1, gw)),
-                      page_spec((1, 1)),
-                      page_spec((1, hd_p // 2)), page_spec((1, gw)),
-                      page_spec((1, 1))],
-            out_specs=out_spec, scratch_shapes=scratch)
-        o = pl.pallas_call(kernel, grid_spec=grid_spec, **params_kw)(
-            bt_flat, lengths, qf,
-            pool["k"]["hi"], pool["k"]["lsb"], pool["k"]["scale"],
-            pool["v"]["hi"], pool["v"]["lsb"], pool["v"]["scale"])
-    else:
-        kernel = functools.partial(_kernel_bf16, page=page, hd=hd, nb=nb,
-                                   chunk=c, g=g, pv_dtype=pool["v"].dtype)
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2, grid=grid,
-            in_specs=[q_spec, page_spec((1, hd)), page_spec((1, hd))],
-            out_specs=out_spec, scratch_shapes=scratch)
-        o = pl.pallas_call(kernel, grid_spec=grid_spec, **params_kw)(
-            bt_flat, lengths, qf, pool["k"], pool["v"])
-
-    # [B, kv, c, g, hd] -> [B, c, H, hd] (undo the chunk-major row fold)
-    o = o.reshape(B, kv, c, g, hd).transpose(0, 2, 1, 3, 4)
-    o = o.reshape(B, c, H, hd).astype(q.dtype)
-    return o if chunked else o[:, 0]
+    """Paged flash-decode via the fused template: unpack the CacheConfig
+    into the template's plain parameters (page size, AMS scheme) and
+    launch. Requires the group-major GQA head layout; returns q's shape in
+    q.dtype."""
+    return fused_paged_attention(
+        q, pool, lengths, block_table,
+        page_size=ccfg.page_size,
+        kv_scheme=ccfg.kv_scheme if ccfg.quantized else None,
+        scale=scale, interpret=interpret)

@@ -1,7 +1,9 @@
 """Lattice-exact reference for paged attention: gather -> dequantize -> attend.
 
-The oracle the Pallas kernel is tested against, and the production XLA
-fallback when Pallas is unavailable on the target. Pages are gathered into
+The oracle every lowering of `kernels.attention_template` is tested
+against (fused paged bf16/AMS, fused contiguous, and the verbatim XLA ref
+bodies the template re-exports), and the production XLA fallback when
+Pallas is unavailable on the target. Pages are gathered into
 a per-slot [B, max_pages*page, kv, hd] view via the block table, AMS planes
 are restored to their EXACT lattice values (`dequantize_kv` is bit-faithful
 to the packed codes), and the existing `flash_decode` online-softmax core

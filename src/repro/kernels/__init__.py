@@ -1,3 +1,23 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# This paper has two:
+#   * ams_matmul — packed-plane AMS matmul (weights stay quantized in HBM)
+#   * attention_template — ONE fused online-softmax decode template that
+#     every serving attention path lowers through: paged/contiguous caches,
+#     bf16 and packed-AMS K/V (restored in VREGs), GQA/MLA families, ragged
+#     multi-query rows. Tile planning + the per-(shape, family, scheme)
+#     autotune cache live in kernels.tuning.
+from repro.kernels.attention_template import (  # noqa: F401
+    attend_contiguous,
+    flash_decode,
+    flash_decode_chunk,
+    fused_contiguous_attention,
+    fused_paged_attention,
+)
+from repro.kernels.tuning import (  # noqa: F401
+    AttnTilePlan,
+    AutotuneCache,
+    plan_attention_tiles,
+)

@@ -1,17 +1,34 @@
-"""Block-shape selection + VMEM budgeting for the AMS matmul kernel.
+"""Block-shape selection + VMEM budgeting for the Pallas kernels.
 
-The dry-run has no wall clock, so tile choice is *structural*: pick the
-largest MXU-aligned (bK, bN) whose working set fits the VMEM budget with
-double-buffered input streams, preferring K-depth (amortizes the f32
-accumulator) over N-width. This is the reasoning the §Perf Pallas hints
-prescribe — from the lowered resource model, not a trace.
+Two planners live here:
+
+  * `plan_tiles` — the AMS matmul (bB, bK, bN) tile. The dry-run has no
+    wall clock, so tile choice is *structural*: pick the largest
+    MXU-aligned (bK, bN) whose working set fits the VMEM budget with
+    double-buffered input streams, preferring K-depth (amortizes the f32
+    accumulator) over N-width. This is the reasoning the §Perf Pallas
+    hints prescribe — from the lowered resource model, not a trace.
+  * `plan_attention_tiles` — the KV block size of the fused attention
+    template (`kernels.attention_template`), fronted by a PERSISTENT
+    per-(shape, family, scheme) `AutotuneCache`. The default plan is
+    deterministic (largest divisor of the cache length whose working set
+    fits the budget — CI stays reproducible); pass a ``measure`` callable
+    (plan -> seconds) to pick by wall clock instead, and the winner is
+    persisted so later sessions reuse it. Set the
+    ``REPRO_ATTN_AUTOTUNE_CACHE`` env var to a JSON path to persist
+    across processes.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
+from typing import Callable, Dict, Optional
 
+from repro.core.formats import get_scheme
+from repro.core.kv_quant import packed_head_dim
 from repro.core.packing import PackLayout
 
 VMEM_BYTES = 16 * 2 ** 20  # v5e per-core VMEM
@@ -62,3 +79,149 @@ def plan_tiles(lay: PackLayout, B: int, K: int, N: int,
     if best is None:  # fall back to the minimum legal tile
         best = TilePlan(8, base_k, 128, vmem_usage(lay, 8, base_k, 128))
     return best
+
+
+# ---------------------------------------------------------------------------
+# Fused-attention KV-block planning (persistent autotune cache)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttnTilePlan:
+    """One KV-block choice for the fused attention template."""
+
+    block_kv: int        # keys per grid step (page_size when paged)
+    rows: int            # folded query rows (chunk * group) per cell
+    vmem_bytes: int      # structural working-set estimate
+    source: str = "default"   # default | measured | fallback | cache
+
+
+def attn_vmem_usage(rows: int, block_kv: int, hd: int,
+                    hd_v: Optional[int] = None, scheme: Optional[str] = None,
+                    buffers: int = 2) -> int:
+    """Bytes of VMEM one (rows, block_kv) attention cell claims: the
+    double-buffered K/V streams (packed planes for an AMS scheme, else f32
+    upper bound), the in-VREG restore tiles, q, the f32 accumulator and the
+    (rows, 128) m/l scratch columns."""
+    hd_v = hd if hd_v is None else hd_v
+    if scheme is not None:
+        fmt = get_scheme(scheme)
+        hd_p = packed_head_dim(hd, fmt)
+        gw = -(-(hd_p // fmt.k) // 32)
+        plane = block_kv * (hd_p // 2) + 4 * block_kv * gw + 4 * block_kv
+        streams = buffers * 2 * plane                  # K and V plane DMAs
+        decoded = 4 * block_kv * (hd + hd_v)           # f32 restore tiles
+    else:
+        streams = buffers * 4 * block_kv * (hd + hd_v)
+        decoded = 0
+    q = 4 * rows * hd
+    acc = 4 * rows * hd_v
+    ml = 2 * 4 * rows * 128
+    out = 4 * rows * hd_v
+    return streams + decoded + q + acc + ml + out
+
+
+def attn_plan_key(*, kind: str, family: str, scheme: Optional[str],
+                  rows: int, hd: int, hd_v: int, s_max: int,
+                  page: int = 0) -> str:
+    """Canonical per-(shape, family, scheme) cache key."""
+    return (f"{kind}/{family}/{scheme or 'bf16'}/rows{rows}/hd{hd}"
+            f"v{hd_v}/s{s_max}/p{page}")
+
+
+class AutotuneCache:
+    """Persistent plan store: a dict keyed by `attn_plan_key`, mirrored to
+    a JSON file when a path is given (load on construction, rewrite on
+    every put). Plans round-trip exactly — `source` is stored so a
+    measured plan stays marked measured after reload."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._plans: Dict[str, AttnTilePlan] = {}
+        if path is not None and os.path.exists(path):
+            self.load(path)
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def get(self, key: str) -> Optional[AttnTilePlan]:
+        return self._plans.get(key)
+
+    def put(self, key: str, plan: AttnTilePlan) -> None:
+        self._plans[key] = plan
+        if self.path is not None:
+            self.save(self.path)
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            raw = json.load(f)
+        for k, d in raw.items():
+            self._plans[k] = AttnTilePlan(**d)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({k: dataclasses.asdict(p)
+                       for k, p in sorted(self._plans.items())}, f, indent=1)
+
+
+_ATTN_CACHE: Optional[AutotuneCache] = None
+
+
+def get_autotune_cache() -> AutotuneCache:
+    """Process-wide cache; persists to $REPRO_ATTN_AUTOTUNE_CACHE if set."""
+    global _ATTN_CACHE
+    if _ATTN_CACHE is None:
+        _ATTN_CACHE = AutotuneCache(os.environ.get("REPRO_ATTN_AUTOTUNE_CACHE"))
+    return _ATTN_CACHE
+
+
+def _divisors_desc(n: int):
+    out = {n}
+    for i in range(1, int(math.isqrt(n)) + 1):
+        if n % i == 0:
+            out.add(i)
+            out.add(n // i)
+    return sorted(out, reverse=True)
+
+
+def plan_attention_tiles(*, kind: str, family: str, scheme: Optional[str],
+                         rows: int, hd: int, hd_v: Optional[int] = None,
+                         s_max: int, page: int = 0,
+                         budget: int = VMEM_BYTES,
+                         cache: Optional[AutotuneCache] = None,
+                         measure: Optional[Callable[[AttnTilePlan], float]]
+                         = None) -> AttnTilePlan:
+    """KV-block plan for one fused-attention shape.
+
+    ``kind`` is "paged" (block fixed at ``page``) or "contiguous" (block
+    chosen from the divisors of ``s_max`` — a block never reads past the
+    cache). Deterministic default: the LARGEST candidate whose
+    `attn_vmem_usage` fits ``budget``; none fitting falls back to the
+    smallest divisor (marked ``source="fallback"``). A ``measure``
+    callable re-ranks the fitting candidates by measured seconds
+    (ties break to the larger block) and is never consulted on a cache
+    hit already measured. Results persist via ``cache`` (defaults to the
+    process-wide `get_autotune_cache`)."""
+    hd_v = hd if hd_v is None else hd_v
+    cache = cache if cache is not None else get_autotune_cache()
+    key = attn_plan_key(kind=kind, family=family, scheme=scheme, rows=rows,
+                        hd=hd, hd_v=hd_v, s_max=s_max, page=page)
+    hit = cache.get(key)
+    if hit is not None and (measure is None or hit.source == "measured"):
+        return hit
+    if kind == "paged":
+        plan = AttnTilePlan(page, rows,
+                            attn_vmem_usage(rows, page, hd, hd_v, scheme))
+        cache.put(key, plan)
+        return plan
+    cands = [AttnTilePlan(bk, rows, attn_vmem_usage(rows, bk, hd, hd_v,
+                                                    scheme))
+             for bk in _divisors_desc(s_max)]
+    fitting = [p for p in cands if p.vmem_bytes <= budget]
+    if not fitting:
+        plan = dataclasses.replace(cands[-1], source="fallback")
+    elif measure is not None:
+        timed = [(measure(p), -p.block_kv, p) for p in fitting]
+        plan = dataclasses.replace(min(timed)[2], source="measured")
+    else:
+        plan = fitting[0]                      # largest fitting block
+    cache.put(key, plan)
+    return plan

@@ -204,15 +204,16 @@ class ServeEngine:
                     print(f"[ptq] quantized to {scheme} ({strategy}) "
                           f"in {time.time()-t0:.1f}s", flush=True)
             self.params = params
+            # the CacheConfig threads through for contiguous caches too:
+            # its impl field routes the decode cores through the fused
+            # attention template (kernels.attention_template)
             self.cache = make_cache(cfg, slots, capacity, tp=tp,
-                                    dtype=jnp.bfloat16,
-                                    cache_cfg=ccfg if ccfg.paged else None)
+                                    dtype=jnp.bfloat16, cache_cfg=ccfg)
             # arg shapes are kept for obs.cost.hlo_step_cost: lowering the
             # jitted step at its serving shapes yields the compiled
             # program's achieved per-tick HBM/FLOP cost
             self._step, self._step_shapes, _ = build_engine_step(
-                self.mesh, cfg, self.rcfg,
-                cache_cfg=ccfg if ccfg.paged else None,
+                self.mesh, cfg, self.rcfg, cache_cfg=ccfg,
                 chunk=self.step_chunk, sampling=True,
                 speculate_k=self.speculate_k)
             # the drafter proposes from the (possibly quantized) serving
@@ -265,7 +266,7 @@ class ServeEngine:
         # insertion order so the legacy percentile math is bit-identical)
         m = self.metrics
         self.signature = engine_step_signature(
-            cfg, self.rcfg, cache_cfg=ccfg if ccfg.paged else None,
+            cfg, self.rcfg, cache_cfg=ccfg,
             chunk=self.step_chunk, speculate_k=self.speculate_k)
         m.gauge("serve_step_signature_info",
                 "engine-step signature (value is always 1)",
@@ -320,7 +321,7 @@ class ServeEngine:
         if self.obs.cost_on:
             dims = model_dims(cfg, self.mesh.shape["model"])
             self.cost_model = build_cost_model(
-                cfg, scheme, ccfg if ccfg.paged else None,
+                cfg, scheme, ccfg,
                 kv=dims.kv, hd=dims.hd, tp=self.mesh.shape["model"],
                 signature=self.signature)
             self._kv_bpt = float(self.kv_bytes_per_token())
@@ -625,7 +626,8 @@ class ServeEngine:
             # 5) advance slot state by consumed chunk lengths; collect
             #    sampled tokens; free finished
             finished, generated = [], 0
-            tick_reads = tick_ach = 0        # roofline attribution (obs.cost)
+            tick_reads = 0                   # roofline attribution (obs.cost)
+            tick_ach_bytes = 0.0
             for s, req in enumerate(self.active):
                 if req is None:
                     continue
@@ -634,26 +636,25 @@ class ServeEngine:
                 self.fed[s] = i + n
                 if self.cost_model is not None:
                     # causal floor: fed token j attends positions [0, i+j]
-                    # plus its own insert; achieved: the read width the
-                    # cache implementation actually materializes per token
-                    # (dense capacity for contiguous, the full block-table
-                    # row for the paged ref gather, whole touched pages
-                    # for the Pallas kernel)
+                    # plus its own insert; achieved: what the configured
+                    # cache impl actually moves (StepCostModel branches —
+                    # dense capacity for contiguous, full block-table row
+                    # + f32 dequant round-trip for the paged ref gather,
+                    # causal whole pages and NO dequant for the fused
+                    # template, which restores packed planes in VREGs)
                     reads = n * i + n * (n + 1) // 2
-                    if not paged:
-                        ach = n * self.capacity
-                    elif self.cache_cfg.impl == "ref":
-                        ach = n * self.cache_cfg.max_pages_per_seq \
-                            * self.cache_cfg.page_size
-                    else:
-                        ps = self.cache_cfg.page_size
-                        ach = sum(-(-(i + j + 1) // ps) * ps
-                                  for j in range(n))
+                    cm = self.cost_model
+                    ach_bytes = cm.achieved_kv_bytes(
+                        i, n, cache_kind=self.cache_cfg.kind,
+                        impl=self.cache_cfg.impl, capacity=self.capacity,
+                        page_size=self.cache_cfg.page_size,
+                        max_pages=self.cache_cfg.max_pages_per_seq,
+                        bytes_per_token=self._kv_bpt)
                     req.kv_floor_bytes += \
-                        (n + reads) * self.cost_model.kv_bytes_per_token
-                    req.kv_achieved_bytes += (n + ach) * self._kv_bpt
+                        (n + reads) * cm.kv_bytes_per_token
+                    req.kv_achieved_bytes += ach_bytes
                     tick_reads += reads
-                    tick_ach += ach
+                    tick_ach_bytes += ach_bytes
                 if paged and req.page_hashes:
                     # publish full PROMPT pages as prefill crosses their
                     # boundaries: content-addressed, so an identical prefix
@@ -739,7 +740,7 @@ class ServeEngine:
                 self._m_floor_f.inc(cm.tick_floor_flops(fed, tick_reads))
                 self._m_kv_floor.inc(
                     (fed + tick_reads) * cm.kv_bytes_per_token)
-                self._m_kv_ach.inc((fed + tick_ach) * self._kv_bpt)
+                self._m_kv_ach.inc(tick_ach_bytes)
             # freed capacity becomes admission headroom the SAME tick: a
             # stop-token hit admits the queue head before the tick closes
             # (its first chunk runs next tick)

@@ -358,6 +358,13 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
     cached length (asserted host-side per tick). Pools are replicated over
     the mesh (sharding pools over kv heads is the documented next step);
     the slot-masking contract is unchanged.
+
+    A CONTIGUOUS ``cache_cfg`` threads through too: its ``impl`` field
+    selects the attention lowering for the GQA/MLA decode cores ("ref" =
+    the plain-XLA flash decode, default; "pallas"/"pallas_interpret" =
+    the fused template of `kernels.attention_template`). Every cache mode
+    x family x chunk combination therefore compiles through the same
+    template module; impl is part of `engine_step_signature`.
     """
     ctx = make_ctx(mesh, "decode")
     paged = cache_cfg is not None and cache_cfg.paged
@@ -492,14 +499,19 @@ def engine_step_signature(cfg: ModelConfig, rcfg: RunConfig, cache_cfg=None,
     """Canonical identity of one jitted engine-step program — the key the
     obs subsystem attributes per-tick cost under (`obs.cost`) and the
     label set exported on ``serve_step_signature_info``. Two engines with
-    equal signatures compile the same step: cache mode x chunk x
-    speculate_k x weight scheme x slot count."""
+    equal signatures compile the same step: cache mode x attention impl x
+    chunk x speculate_k x weight scheme x slot count. ``impl`` is the
+    attention lowering ("ref" = plain-XLA flash decode, "pallas"/
+    "pallas_interpret" = the fused template of
+    `kernels.attention_template`) — it now applies to contiguous caches
+    too, so it is part of the compiled program's identity."""
     return dict(
         arch=cfg.name,
         scheme=rcfg.quant.scheme if rcfg.quantized else "fp16",
         cache=cache_cfg.kind if cache_cfg is not None else "contiguous",
         kv_scheme=(cache_cfg.kv_scheme
                    if cache_cfg is not None and cache_cfg.quantized else "bf16"),
+        impl=cache_cfg.impl if cache_cfg is not None else "ref",
         slots=rcfg.global_batch,
         chunk=chunk,
         speculate_k=speculate_k,

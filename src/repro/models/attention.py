@@ -20,6 +20,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# The decode online-softmax bodies live in the fused attention template
+# (`repro.kernels.attention_template`) — `flash_decode`/`flash_decode_chunk`
+# are re-exported here for their historical import path, and every decode
+# core below routes through `attend_contiguous` (impl="ref" IS those
+# functions, bit-identical; "pallas"/"pallas_interpret" lowers the same
+# math through the fused Pallas kernel).
+from repro.kernels.attention_template import (  # noqa: F401
+    _cache_positions,
+    attend_contiguous,
+    flash_decode,
+    flash_decode_chunk,
+)
+
 from .common import apply_linear, apply_rope, make_linear, model_dims
 
 
@@ -125,160 +138,6 @@ def blockwise_attention(
                                   (kp, vp, k_pos_blocks))
     out = acc / jnp.maximum(l, 1e-20)[..., None]
     return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B, Sq, H, hd_v]
-
-
-# ---------------------------------------------------------------------------
-# Flash decode (single step, optionally sequence-sharded cache)
-# ---------------------------------------------------------------------------
-def _cache_positions(S_loc: int, pos, shard, ring_window: int):
-    """Global key position held by each local cache slot.
-
-    Full cache: slot j on shard s holds position s*S_loc + j. Ring (sliding
-    window) cache of width W: global slot g holds the largest p <= pos with
-    p % W == g (older entries were overwritten).
-    """
-    g = shard * S_loc + jnp.arange(S_loc)
-    if ring_window:
-        return pos - ((pos - g) % ring_window)
-    return g
-
-
-def flash_decode(
-    q: jnp.ndarray,            # [B, H, hd]
-    k_cache: jnp.ndarray,      # [B, S_loc, kv, hd]
-    v_cache: jnp.ndarray,      # [B, S_loc, kv, hd_v]
-    pos: jnp.ndarray,          # int32 current length (num valid keys):
-                               #   scalar (shared) or [B] (per-slot lengths)
-    *,
-    kv_map: np.ndarray,
-    axis_name: Optional[str] = None,   # mesh axis the S dim is sharded over
-    window: int = 0,
-    ring: bool = False,
-    scale: Optional[float] = None,
-) -> jnp.ndarray:
-    B, H, hd = q.shape
-    S_loc = k_cache.shape[1]
-    hd_v = v_cache.shape[-1]
-    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
-    shard = jax.lax.axis_index(axis_name) if axis_name else 0
-    pos = jnp.asarray(pos, jnp.int32)
-    per_slot = pos.ndim == 1
-    pos_b = pos[:, None] if per_slot else pos  # broadcasts against [S_loc]
-    k_pos = _cache_positions(S_loc, pos_b - 1, shard, window if ring else 0)
-
-    kv_n = k_cache.shape[2]
-    grouped = (H % kv_n == 0) and np.array_equal(
-        kv_map, np.arange(H) // (H // kv_n))
-    qf = q * np.float32(scale).astype(q.dtype)
-    if grouped:
-        g = H // kv_n
-        qg = qf.reshape(B, kv_n, g, hd)
-        s = jnp.einsum("bngd,bknd->bngk", qg, k_cache,
-                       preferred_element_type=jnp.float32).reshape(B, H, S_loc)
-    else:
-        kvm = jnp.asarray(kv_map)
-        ke = k_cache[:, :, kvm, :]
-        s = jnp.einsum("bhd,bkhd->bhk", qf, ke,
-                       preferred_element_type=jnp.float32)
-    valid = (k_pos >= 0) & (k_pos < pos_b)  # ring slots may map to pre-history
-    if window > 0:
-        valid = valid & (pos_b - 1 - k_pos < window)
-    # [B, 1, S_loc] when per-slot, [1, 1, S_loc] when shared
-    vmask = valid[:, None, :] if per_slot else valid[None, None, :]
-    s = jnp.where(vmask, s, -jnp.inf)
-
-    m = s.max(axis=-1)                                   # [B, H]
-    if axis_name:
-        m = jax.lax.pmax(m, axis_name)
-    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
-    p = jnp.exp(s - m_safe[..., None])
-    p = jnp.where(vmask, p, 0.0)
-    l = p.sum(axis=-1)                                   # [B, H]
-    if grouped:
-        g = H // kv_n
-        pg = p.reshape(B, kv_n, g, S_loc)
-        o = jnp.einsum("bngk,bknd->bngd", pg.astype(v_cache.dtype), v_cache,
-                       preferred_element_type=jnp.float32).reshape(B, H, hd_v)
-    else:
-        ve = v_cache[:, :, kvm, :]
-        o = jnp.einsum("bhk,bkhd->bhd", p.astype(ve.dtype), ve,
-                       preferred_element_type=jnp.float32)
-    if axis_name:
-        l = jax.lax.psum(l, axis_name)
-        o = jax.lax.psum(o, axis_name)
-    return (o / jnp.maximum(l, 1e-20)[..., None]).astype(q.dtype)
-
-
-def flash_decode_chunk(
-    q: jnp.ndarray,            # [B, c, H, hd] query block (c <= chunk size)
-    k_cache: jnp.ndarray,      # [B, S_loc, kv, hd]
-    v_cache: jnp.ndarray,      # [B, S_loc, kv, hd_v]
-    lengths: jnp.ndarray,      # [B, c] int32 valid keys PER QUERY (0 = masked
-                               #   row -> exact-zero output)
-    *,
-    kv_map: np.ndarray,
-    axis_name: Optional[str] = None,
-    scale: Optional[float] = None,
-) -> jnp.ndarray:
-    """Chunked flash-decode: a [B, c] ragged query block attends the cache.
-
-    Intra-chunk causality is carried entirely by ``lengths``: the caller
-    inserts the chunk's keys FIRST, then sets query j's length to
-    ``start + j + 1`` — so each query sees the prefix plus itself and the
-    chunk entries before it, never the ones after. Rows past a slot's valid
-    count get length 0 and flush to exact zeros (the engine discards them).
-    Same additive-mask online-softmax math as `flash_decode`; no ring /
-    sliding-window support (chunked mode is gated to plain-GQA / MLA
-    families).
-    """
-    B, c, H, hd = q.shape
-    S_loc = k_cache.shape[1]
-    hd_v = v_cache.shape[-1]
-    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
-    shard = jax.lax.axis_index(axis_name) if axis_name else 0
-    lengths = jnp.asarray(lengths, jnp.int32)
-    k_pos = shard * S_loc + jnp.arange(S_loc)        # [S_loc] global positions
-
-    kv_n = k_cache.shape[2]
-    grouped = (H % kv_n == 0) and np.array_equal(
-        kv_map, np.arange(H) // (H // kv_n))
-    qf = q * np.float32(scale).astype(q.dtype)
-    if grouped:
-        g = H // kv_n
-        qg = qf.reshape(B, c, kv_n, g, hd)
-        s = jnp.einsum("bcngd,bknd->bcngk", qg, k_cache,
-                       preferred_element_type=jnp.float32)
-        s = s.reshape(B, c, H, S_loc)
-    else:
-        kvm = jnp.asarray(kv_map)
-        ke = k_cache[:, :, kvm, :]
-        s = jnp.einsum("bchd,bkhd->bchk", qf, ke,
-                       preferred_element_type=jnp.float32)
-    valid = k_pos[None, None, :] < lengths[:, :, None]   # [B, c, S_loc]
-    vmask = valid[:, :, None, :]                          # [B, c, 1, S_loc]
-    s = jnp.where(vmask, s, -jnp.inf)
-
-    m = s.max(axis=-1)                                    # [B, c, H]
-    if axis_name:
-        m = jax.lax.pmax(m, axis_name)
-    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
-    p = jnp.exp(s - m_safe[..., None])
-    p = jnp.where(vmask, p, 0.0)
-    l = p.sum(axis=-1)                                    # [B, c, H]
-    if grouped:
-        g = H // kv_n
-        pg = p.reshape(B, c, kv_n, g, S_loc)
-        o = jnp.einsum("bcngk,bknd->bcngd", pg.astype(v_cache.dtype), v_cache,
-                       preferred_element_type=jnp.float32)
-        o = o.reshape(B, c, H, hd_v)
-    else:
-        ve = v_cache[:, :, kvm, :]
-        o = jnp.einsum("bchk,bkhd->bchd", p.astype(ve.dtype), ve,
-                       preferred_element_type=jnp.float32)
-    if axis_name:
-        l = jax.lax.psum(l, axis_name)
-        o = jax.lax.psum(o, axis_name)
-    return (o / jnp.maximum(l, 1e-20)[..., None]).astype(q.dtype)
 
 
 def cache_insert(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray,
@@ -402,14 +261,17 @@ def gqa_attn_train(p, x, cfg, dims, *, policy=None, block_kv=1024,
 
 
 def gqa_decode_core(q, k_new, v_new, cache_k, cache_v, pos, *,
-                    kv_map, window=0, ring=False, scale=None, axis_name=None):
+                    kv_map, window=0, ring=False, scale=None, axis_name=None,
+                    impl="ref"):
     """Insert + attend. q: [B, H, hd]; k/v_new: [B, 1, kv, hd];
     caches [B, S_loc, kv, hd]. Runs inside shard_map when the cache is
-    sequence-sharded over `axis_name`."""
+    sequence-sharded over `axis_name` (where ``impl`` always resolves to
+    the collective-carrying ref path)."""
     cache_k = cache_insert(cache_k, k_new, pos, axis_name, window if ring else 0)
     cache_v = cache_insert(cache_v, v_new, pos, axis_name, window if ring else 0)
-    o = flash_decode(q, cache_k, cache_v, pos + 1, kv_map=kv_map,
-                     axis_name=axis_name, window=window, ring=ring, scale=scale)
+    o = attend_contiguous(q, cache_k, cache_v, pos + 1, kv_map=kv_map,
+                          axis_name=axis_name, window=window, ring=ring,
+                          scale=scale, impl=impl)
     return o, cache_k, cache_v
 
 
@@ -441,7 +303,8 @@ def gqa_attn_decode_paged(p, x, pool, pos, block_tables, cfg, dims, *,
 
 
 def gqa_attn_decode(p, x, cache_k, cache_v, pos, cfg, dims, *,
-                    policy=None, core_wrap=None, window=0, ring=False):
+                    policy=None, core_wrap=None, window=0, ring=False,
+                    attn_impl="ref"):
     """x: [B, 1, D]; caches [B, S_loc, kv, hd]. Returns (out, new caches).
 
     ``core_wrap(core_fn)`` lets the caller shard_map the insert+attend core
@@ -456,7 +319,8 @@ def gqa_attn_decode(p, x, cache_k, cache_v, pos, cfg, dims, *,
     q, k, v = gqa_qkv(p, x, cfg, dims, positions, policy)
     kvm = kv_index_map(dims.H, dims.H_true, dims.kv)
     core = functools.partial(gqa_decode_core, kv_map=kvm,
-                             window=window or cfg.sliding_window, ring=ring)
+                             window=window or cfg.sliding_window, ring=ring,
+                             impl=attn_impl)
     if core_wrap is not None:
         core = core_wrap(core)
     o, cache_k, cache_v = core(q[:, 0], k, v, cache_k, cache_v, pos)
@@ -480,20 +344,20 @@ def chunk_lengths(pos: jnp.ndarray, nvalid: jnp.ndarray, c: int) -> jnp.ndarray:
 
 
 def gqa_decode_core_chunk(q, k_new, v_new, cache_k, cache_v, pos, nvalid, *,
-                          kv_map, scale=None, axis_name=None):
+                          kv_map, scale=None, axis_name=None, impl="ref"):
     """Chunked insert + attend. q: [B, c, H, hd]; k/v_new: [B, c, kv, hd];
     caches [B, S_loc, kv, hd]; pos/nvalid [B]. Keys land first, then every
     query attends with its own length (intra-chunk causal by construction)."""
     cache_k = cache_insert_chunk(cache_k, k_new, pos, nvalid, axis_name)
     cache_v = cache_insert_chunk(cache_v, v_new, pos, nvalid, axis_name)
     lengths = chunk_lengths(pos, nvalid, q.shape[1])
-    o = flash_decode_chunk(q, cache_k, cache_v, lengths, kv_map=kv_map,
-                           axis_name=axis_name, scale=scale)
+    o = attend_contiguous(q, cache_k, cache_v, lengths, kv_map=kv_map,
+                          axis_name=axis_name, scale=scale, impl=impl)
     return o, cache_k, cache_v
 
 
 def gqa_attn_decode_chunk(p, x, cache_k, cache_v, pos, nvalid, cfg, dims, *,
-                          policy=None, core_wrap=None):
+                          policy=None, core_wrap=None, attn_impl="ref"):
     """Ragged multi-token decode: x [B, c, D], per-slot start positions
     ``pos`` [B] and valid counts ``nvalid`` [B]. Returns (out [B, c, D],
     new caches); rows past a slot's nvalid are exact no-ops."""
@@ -504,7 +368,8 @@ def gqa_attn_decode_chunk(p, x, cache_k, cache_v, pos, nvalid, cfg, dims, *,
     positions = jnp.maximum(pos[:, None] + jnp.arange(c, dtype=jnp.int32), 0)
     q, k, v = gqa_qkv(p, x, cfg, dims, positions, policy)
     kvm = kv_index_map(dims.H, dims.H_true, dims.kv)
-    core = functools.partial(gqa_decode_core_chunk, kv_map=kvm)
+    core = functools.partial(gqa_decode_core_chunk, kv_map=kvm,
+                             impl=attn_impl)
     if core_wrap is not None:
         core = core_wrap(core)
     o, cache_k, cache_v = core(q, k, v, cache_k, cache_v, pos, nvalid)
@@ -617,17 +482,22 @@ def mla_attn_train(p, x, cfg, dims, *, policy=None, block_kv=1024, prefix_len=0)
     return out, kv
 
 
-def mla_decode_core(q_eff, kv_new, cache_kv, pos, *, r_kv, scale, axis_name=None):
-    """cache_kv: [B, S_loc, 1, r_kv+dr]; kv_new: [B, 1, 1, r_kv+dr]."""
+def mla_decode_core(q_eff, kv_new, cache_kv, pos, *, r_kv, scale,
+                    axis_name=None, impl="ref"):
+    """cache_kv: [B, S_loc, 1, r_kv+dr]; kv_new: [B, 1, 1, r_kv+dr]. The
+    fused path slices values from the SAME compressed stream in-kernel
+    (``value_slice=r_kv``) — V costs no extra HBM reads."""
     H = q_eff.shape[1]
     cache_kv = cache_insert(cache_kv, kv_new, pos, axis_name)
     kvm = np.zeros((H,), np.int32)
-    o_c = flash_decode(q_eff, cache_kv, cache_kv[..., :r_kv], pos + 1,
-                       kv_map=kvm, axis_name=axis_name, scale=scale)
+    o_c = attend_contiguous(q_eff, cache_kv, cache_kv[..., :r_kv], pos + 1,
+                            kv_map=kvm, axis_name=axis_name, scale=scale,
+                            impl=impl, value_slice=r_kv)
     return o_c, cache_kv
 
 
-def mla_attn_decode(p, x, cache_kv, pos, cfg, dims, *, policy=None, core_wrap=None):
+def mla_attn_decode(p, x, cache_kv, pos, cfg, dims, *, policy=None,
+                    core_wrap=None, attn_impl="ref"):
     """cache_kv: [B, S_loc, 1, r_kv+dr] compressed cache; pos scalar or [B]."""
     import functools
     r_kv, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
@@ -638,7 +508,8 @@ def mla_attn_decode(p, x, cache_kv, pos, cfg, dims, *, policy=None, core_wrap=No
     q_eff = _mla_q_eff(p, x, cfg, dims, positions, policy)[:, 0]  # [B,H,r+dr]
     kv = _mla_kv_stream(p, x, cfg, positions, policy)             # [B,1,r+dr]
     scale = 1.0 / np.sqrt(cfg.qk_nope_dim + dr)
-    core = functools.partial(mla_decode_core, r_kv=r_kv, scale=scale)
+    core = functools.partial(mla_decode_core, r_kv=r_kv, scale=scale,
+                             impl=attn_impl)
     if core_wrap is not None:
         core = core_wrap(core)
     o_c, cache_kv = core(q_eff, kv[:, :, None, :], cache_kv, pos)
@@ -647,19 +518,20 @@ def mla_attn_decode(p, x, cache_kv, pos, cfg, dims, *, policy=None, core_wrap=No
 
 
 def mla_decode_core_chunk(q_eff, kv_new, cache_kv, pos, nvalid, *, r_kv,
-                          scale, axis_name=None):
+                          scale, axis_name=None, impl="ref"):
     """Chunked absorbed-MLA core. q_eff [B, c, H, r_kv+dr]; kv_new
     [B, c, 1, r_kv+dr]; cache_kv [B, S_loc, 1, r_kv+dr]."""
     cache_kv = cache_insert_chunk(cache_kv, kv_new, pos, nvalid, axis_name)
     kvm = np.zeros((q_eff.shape[2],), np.int32)
     lengths = chunk_lengths(pos, nvalid, q_eff.shape[1])
-    o_c = flash_decode_chunk(q_eff, cache_kv, cache_kv[..., :r_kv], lengths,
-                             kv_map=kvm, axis_name=axis_name, scale=scale)
+    o_c = attend_contiguous(q_eff, cache_kv, cache_kv[..., :r_kv], lengths,
+                            kv_map=kvm, axis_name=axis_name, scale=scale,
+                            impl=impl, value_slice=r_kv)
     return o_c, cache_kv
 
 
 def mla_attn_decode_chunk(p, x, cache_kv, pos, nvalid, cfg, dims, *,
-                          policy=None, core_wrap=None):
+                          policy=None, core_wrap=None, attn_impl="ref"):
     """Ragged multi-token MLA decode: x [B, c, D]; same contract as
     `gqa_attn_decode_chunk` on the compressed KV stream."""
     import functools
@@ -670,7 +542,8 @@ def mla_attn_decode_chunk(p, x, cache_kv, pos, nvalid, cfg, dims, *,
     q_eff = _mla_q_eff(p, x, cfg, dims, positions, policy)   # [B, c, H, r+dr]
     kv = _mla_kv_stream(p, x, cfg, positions, policy)        # [B, c, r+dr]
     scale = 1.0 / np.sqrt(cfg.qk_nope_dim + dr)
-    core = functools.partial(mla_decode_core_chunk, r_kv=r_kv, scale=scale)
+    core = functools.partial(mla_decode_core_chunk, r_kv=r_kv, scale=scale,
+                             impl=attn_impl)
     if core_wrap is not None:
         core = core_wrap(core)
     o_c, cache_kv = core(q_eff, kv[:, :, None, :], cache_kv, pos, nvalid)

@@ -183,6 +183,9 @@ def block_decode(p, x, cache, pos, kind, cfg, dims, *, policy=None,
     """x: [B, 1, D]. Returns (x, new_cache)."""
     seq_sharded = ctx is not None and ctx.mesh is not None and ctx.seq_shard_cache
     paged = cache_cfg is not None and cache_cfg.paged
+    # contiguous-cache attention impl (ref | pallas | pallas_interpret):
+    # routes the GQA/MLA cores through the fused attention template
+    attn_impl = cache_cfg.impl if cache_cfg is not None else "ref"
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if kind == "mamba":
         out, (conv_st, ssm_st) = S.mamba_decode(
@@ -196,7 +199,8 @@ def block_decode(p, x, cache, pos, kind, cfg, dims, *, policy=None,
     elif kind == "mla":
         wrap = _seq_core_wrap(ctx, 1) if seq_sharded else None
         out, ckv = A.mla_attn_decode(p["attn"], h, cache["kv"], pos, cfg, dims,
-                                     policy=policy, core_wrap=wrap)
+                                     policy=policy, core_wrap=wrap,
+                                     attn_impl=attn_impl)
         x = x + out
         cache = {"kv": ckv}
     elif paged:
@@ -209,7 +213,8 @@ def block_decode(p, x, cache, pos, kind, cfg, dims, *, policy=None,
         wrap = _seq_core_wrap(ctx, 2) if seq_sharded else None
         out, (ck, cv) = A.gqa_attn_decode(
             p["attn"], h, cache["k"], cache["v"], pos, cfg, dims,
-            policy=policy, core_wrap=wrap, window=window, ring=bool(window))
+            policy=policy, core_wrap=wrap, window=window, ring=bool(window),
+            attn_impl=attn_impl)
         x = x + out
         cache = {"k": ck, "v": cv}
     h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
@@ -255,12 +260,14 @@ def block_decode_chunk(p, x, cache, pos, nvalid, kind, cfg, dims, *,
             f"chunked decode does not support {kind!r} blocks")
     seq_sharded = ctx is not None and ctx.mesh is not None and ctx.seq_shard_cache
     paged = cache_cfg is not None and cache_cfg.paged
+    attn_impl = cache_cfg.impl if cache_cfg is not None else "ref"
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if kind == "mla":
         wrap = _seq_core_wrap_chunk(ctx, 1) if seq_sharded else None
         out, ckv = A.mla_attn_decode_chunk(p["attn"], h, cache["kv"], pos,
                                            nvalid, cfg, dims, policy=policy,
-                                           core_wrap=wrap)
+                                           core_wrap=wrap,
+                                           attn_impl=attn_impl)
         x = x + out
         cache = {"kv": ckv}
     elif paged:
@@ -272,7 +279,7 @@ def block_decode_chunk(p, x, cache, pos, nvalid, kind, cfg, dims, *,
         wrap = _seq_core_wrap_chunk(ctx, 2) if seq_sharded else None
         out, (ck, cv) = A.gqa_attn_decode_chunk(
             p["attn"], h, cache["k"], cache["v"], pos, nvalid, cfg, dims,
-            policy=policy, core_wrap=wrap)
+            policy=policy, core_wrap=wrap, attn_impl=attn_impl)
         x = x + out
         cache = {"k": ck, "v": cv}
     h2 = rms_norm(x, p["ln2"], cfg.norm_eps)

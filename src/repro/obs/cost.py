@@ -78,6 +78,9 @@ class StepCostModel:
     kv_bytes_per_token: float      # FORMAT floor, K+V, all layers
     kv_ideal_bytes_per_token: float  # PAPER floor, K+V, all layers
     kv_bf16_bytes_per_token: float   # the bf16 baseline the paper divides by
+    # f32 K+V gather round-trip per dequantized position (write + read of
+    # the dense views the ref impl materializes; 0 for bf16 caches)
+    kv_dequant_bytes_per_token: float = 0.0
 
     def tick_floor_bytes(self, tokens_fed: int, positions_read: int) -> float:
         """Floor HBM traffic of one tick: every weight byte once, plus one
@@ -96,6 +99,49 @@ class StepCostModel:
                    self.tick_floor_flops(tokens_fed, positions_read)
                    / PEAK_FLOPS)
 
+    # ------------------------------------------------ achieved KV bytes
+    def achieved_kv_read_positions(self, i: int, n: int, *,
+                                   cache_kind: str = "contiguous",
+                                   impl: str = "ref", capacity: int = 0,
+                                   page_size: int = 0,
+                                   max_pages: int = 0) -> int:
+        """Cache positions the implementation READS while appending n
+        tokens to a slot already holding i: the dense capacity for a
+        contiguous cache, the full block-table row for the paged ref
+        gather, and the causally-touched whole pages for the fused
+        template (which length-masks inside the page)."""
+        if cache_kind == "contiguous" or not page_size:
+            return n * capacity
+        if impl == "ref":
+            return n * max_pages * page_size
+        return sum(-(-(i + j + 1) // page_size) * page_size
+                   for j in range(n))
+
+    def achieved_kv_bytes(self, i: int, n: int, *,
+                          cache_kind: str = "contiguous", impl: str = "ref",
+                          capacity: int = 0, page_size: int = 0,
+                          max_pages: int = 0,
+                          bytes_per_token: Optional[float] = None) -> float:
+        """Bytes the cache implementation moves for that same append: one
+        pool-layout write per fed token plus the read width above — and,
+        for the REF impl of a quantized cache only, the gather-dequantize
+        ROUND TRIP (it materializes dense f32 K/V views in HBM and reads
+        them back; `kv_dequant_bytes_per_token` per gathered position).
+        The fused template restores packed planes in VREGs, so its branch
+        carries no dequant term — `kv_vs_floor` then reflects exactly the
+        causal-page padding, which the bench asserts
+        (`benchmarks/bench_kernel_speedup.py` attention rows)."""
+        bpt = (self.kv_bytes_per_token if bytes_per_token is None
+               else bytes_per_token)
+        reads = self.achieved_kv_read_positions(
+            i, n, cache_kind=cache_kind, impl=impl, capacity=capacity,
+            page_size=page_size, max_pages=max_pages)
+        out = (n + reads) * bpt
+        if (page_size and impl == "ref"
+                and self.kv_dequant_bytes_per_token):
+            out += reads * self.kv_dequant_bytes_per_token
+        return out
+
 
 def build_cost_model(cfg, scheme: str, cache_cfg=None, *,
                      kv: Optional[int] = None, hd: Optional[int] = None,
@@ -112,10 +158,14 @@ def build_cost_model(cfg, scheme: str, cache_cfg=None, *,
     kv = cfg.num_kv_heads if kv is None else kv
     hd = cfg.head_dim if hd is None else hd
     bf16_tok = 2 * kv * (2 * hd)
+    dequant = 0.0
     if cache_cfg is not None and getattr(cache_cfg, "quantized", False):
         fmt = get_scheme(cache_cfg.kv_scheme)
         kv_tok = 2 * kv * kv_vector_bytes_floor(hd, fmt)
         kv_ideal = 2 * kv * kv_vector_bytes_ideal(hd, fmt)
+        # the ref gather-dequantize writes + reads back dense f32 K and V
+        # views per gathered position (2 vectors x hd x 4 bytes x 2 trips)
+        dequant = 2 * kv * hd * 4 * 2
     else:
         kv_tok = float(bf16_tok)
         kv_ideal = float(bf16_tok)
@@ -127,6 +177,7 @@ def build_cost_model(cfg, scheme: str, cache_cfg=None, *,
         kv_bytes_per_token=cfg.num_layers * kv_tok,
         kv_ideal_bytes_per_token=cfg.num_layers * kv_ideal,
         kv_bf16_bytes_per_token=cfg.num_layers * float(bf16_tok),
+        kv_dequant_bytes_per_token=cfg.num_layers * float(dequant),
     )
 
 

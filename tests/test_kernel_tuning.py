@@ -1,5 +1,9 @@
 """Tile planning: every plan must fit VMEM, align to packing + MXU, and the
-planned tiles must produce correct results through the kernel."""
+planned tiles must produce correct results through the kernel. The fused
+attention template's planner adds a persistent per-(shape, family, scheme)
+autotune cache — its contract (deterministic default, VMEM-budget
+rejection, JSON round-trip, measured selection behind an explicit
+callable) is pinned below."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +12,16 @@ import pytest
 from repro.core import SCHEMES, get_scheme, quantize_linear
 from repro.core.packing import make_layout
 from repro.kernels import ops, ref
-from repro.kernels.tuning import VMEM_BYTES, plan_tiles, vmem_usage
+from repro.kernels.tuning import (
+    VMEM_BYTES,
+    AttnTilePlan,
+    AutotuneCache,
+    attn_plan_key,
+    attn_vmem_usage,
+    plan_attention_tiles,
+    plan_tiles,
+    vmem_usage,
+)
 
 
 @pytest.mark.parametrize("scheme", list(SCHEMES))
@@ -68,3 +81,95 @@ def test_planned_tiles_run_correctly():
     np.testing.assert_allclose(np.asarray(y),
                                np.asarray(ref.ams_matmul_ref(xb, q.packed)),
                                rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------- fused-attention autotune cache
+def test_attn_plan_deterministic_default():
+    """No measure callable -> the plan is a pure function of the shape: the
+    LARGEST divisor of s_max whose working set fits the budget. Two fresh
+    caches must agree exactly (CI reproducibility)."""
+    kw = dict(kind="contiguous", family="gqa", scheme=None, rows=8, hd=32,
+              hd_v=32, s_max=48)
+    a = plan_attention_tiles(cache=AutotuneCache(), **kw)
+    b = plan_attention_tiles(cache=AutotuneCache(), **kw)
+    assert a == b and a.source == "default"
+    assert 48 % a.block_kv == 0
+    assert a.vmem_bytes == attn_vmem_usage(8, a.block_kv, 32, 32, None)
+    assert a.vmem_bytes <= VMEM_BYTES
+    # every larger divisor must have been rejected for VMEM, not skipped
+    for bk in (d for d in range(a.block_kv + 1, 49) if 48 % d == 0):
+        assert attn_vmem_usage(8, bk, 32, 32, None) > VMEM_BYTES
+
+
+def test_attn_plan_vmem_budget_rejection():
+    """Shrinking the budget shrinks the block; a budget nothing fits falls
+    back to the smallest divisor and says so in ``source``."""
+    kw = dict(kind="contiguous", family="gqa", scheme=None, rows=8, hd=32,
+              hd_v=32, s_max=64)
+    big = plan_attention_tiles(cache=AutotuneCache(), **kw)
+    tight = attn_vmem_usage(8, big.block_kv, 32, 32, None) - 1
+    small = plan_attention_tiles(cache=AutotuneCache(), budget=tight, **kw)
+    assert small.block_kv < big.block_kv
+    assert small.vmem_bytes <= tight
+    none_fit = plan_attention_tiles(cache=AutotuneCache(), budget=1, **kw)
+    assert none_fit.block_kv == 1 and none_fit.source == "fallback"
+
+
+def test_attn_plan_paged_kind_is_the_page():
+    plan = plan_attention_tiles(kind="paged", family="gqa", scheme="fp4.25-e2m2",
+                                rows=4, hd=32, s_max=16, page=4,
+                                cache=AutotuneCache())
+    assert plan.block_kv == 4
+    assert plan.vmem_bytes == attn_vmem_usage(4, 4, 32, 32, "fp4.25-e2m2")
+    # packed planes stream fewer bytes than the bf16 pair at the same block
+    assert (attn_vmem_usage(4, 4, 32, 32, "fp4.25-e2m2")
+            < attn_vmem_usage(4, 4, 32, 32, None) + 4 * 4 * 64)
+
+
+def test_attn_plan_persistence_round_trip(tmp_path):
+    """Plans survive the JSON file bit-for-bit, ``source`` included, and a
+    fresh process (fresh AutotuneCache on the same path) serves the stored
+    plan as a hit instead of re-planning."""
+    path = str(tmp_path / "attn_cache.json")
+    kw = dict(kind="contiguous", family="mla", scheme=None, rows=16, hd=64,
+              hd_v=16, s_max=32)
+    cache = AutotuneCache(path)
+    plan = plan_attention_tiles(cache=cache, **kw)
+    assert len(cache) == 1
+    reloaded = AutotuneCache(path)
+    key = attn_plan_key(page=0, **kw)
+    assert reloaded.get(key) == plan          # exact dataclass round-trip
+    # a poisoned stored plan is SERVED, proving the hit path is used
+    forged = AttnTilePlan(block_kv=1, rows=16, vmem_bytes=7, source="measured")
+    reloaded.put(key, forged)
+    assert plan_attention_tiles(cache=AutotuneCache(path), **kw) == forged
+
+
+def test_attn_plan_measured_selection_and_hit_skips_measure(tmp_path):
+    """A measure callable re-ranks the fitting candidates by wall-clock
+    (here: rigged to prefer block 4); the winner persists as
+    ``source="measured"`` and later measured lookups return the hit
+    WITHOUT calling measure again."""
+    path = str(tmp_path / "attn_cache.json")
+    calls = []
+
+    def rigged(plan):
+        calls.append(plan.block_kv)
+        return abs(plan.block_kv - 4) + 1.0
+
+    kw = dict(kind="contiguous", family="gqa", scheme=None, rows=8, hd=32,
+              hd_v=32, s_max=16)
+    plan = plan_attention_tiles(cache=AutotuneCache(path), measure=rigged, **kw)
+    assert plan.block_kv == 4 and plan.source == "measured"
+    assert sorted(calls) == [1, 2, 4, 8, 16]   # every divisor of 16 timed
+    n = len(calls)
+    again = plan_attention_tiles(cache=AutotuneCache(path), measure=rigged,
+                                 **kw)
+    assert again == plan and len(calls) == n   # cache hit: no re-timing
+    # an unmeasured (default) hit does NOT satisfy a measured request
+    kw2 = dict(kw, family="mla")
+    c2 = AutotuneCache()
+    d2 = plan_attention_tiles(cache=c2, **kw2)
+    assert d2.source == "default"
+    m2 = plan_attention_tiles(cache=c2, measure=rigged, **kw2)
+    assert m2.source == "measured" and m2.block_kv == 4
