@@ -53,6 +53,15 @@ and the TTFT columns show the win. All modes land in the same CSV
 (registered in ``benchmarks/run.py``), so fp16 vs AMS-paged serving is one
 diffable file.
 
+``--mesh tpN`` runs the SAME engine tensor-parallel on a (1, N) serving
+mesh (docs/serving.md §Sharded serving): weights N-sharded, paged KV pools
+sharded over kv heads and never gathered. Token streams — and so every
+deterministic tick/latency column — are bit-identical to tp=1; the one
+column that moves is ``kv_bytes_per_token``, which becomes PER-DEVICE and
+scales as 1/N (AMS compression and head sharding multiply). On CPU the N
+host devices are forced automatically (XLA_FLAGS) when jax isn't imported
+yet.
+
 Run (reduced, CPU):
     PYTHONPATH=src python -m benchmarks.bench_serving --reduced --paged
 
@@ -122,6 +131,24 @@ def sampling_for(args, i: int, vocab: int):
                           stop_token_ids=stop)
 
 
+def mesh_for(args):
+    """--mesh tpN -> a (1, N) serving mesh (None when off). Needs N visible
+    devices; `main` forces them via XLA_FLAGS when jax isn't imported yet,
+    so by the time this runs a shortfall is a real environment problem."""
+    if not args.mesh:
+        return None
+    import jax
+
+    from repro.launch.mesh import make_serving_mesh
+    tp = int(args.mesh[2:])
+    if len(jax.devices()) < tp:
+        raise SystemExit(
+            f"--mesh {args.mesh} needs {tp} devices but jax sees "
+            f"{len(jax.devices())}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={tp} before jax loads")
+    return make_serving_mesh(tp)
+
+
 def _drive(scheme: str, work, args, vocab: int, obs=None):
     """Build a ServeEngine, warm the jit, drive the full workload.
     Returns (engine, requests, per-tick utilization)."""
@@ -133,6 +160,7 @@ def _drive(scheme: str, work, args, vocab: int, obs=None):
                       cache_config=cache_config_for(scheme, args),
                       prefill_chunk=args.chunk,
                       speculate_k=args.speculate, drafter=args.drafter,
+                      mesh=mesh_for(args),
                       obs=obs, verbose=not args.quiet)
     # warm the jit before the clock matters: one throwaway request, then
     # drop its ticks from the metrics (compile would otherwise land in p99)
@@ -303,6 +331,15 @@ def main(argv=None, out_lines=None):
                     help="lower+compile the engine step and print XLA's own "
                          "per-tick FLOP/HBM-byte estimate next to the "
                          "analytic roofline floor")
+    ap.add_argument("--mesh", default="",
+                    help="'tpN': run the engine tensor-parallel on a "
+                         "(1, N) serving mesh — weights N-sharded, paged "
+                         "KV pools head-sharded (never gathered), token "
+                         "streams bit-identical to tp=1; the CSV row gains "
+                         "a /tpN tag and kv_bytes_per_token becomes "
+                         "PER-DEVICE (scales 1/N). On CPU the N host "
+                         "devices are forced automatically when jax isn't "
+                         "loaded yet")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=0.3,
                     help="mean arrivals per engine tick (Poisson)")
@@ -313,6 +350,19 @@ def main(argv=None, out_lines=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
+
+    if args.mesh:
+        import sys
+        if not (args.mesh.startswith("tp") and args.mesh[2:].isdigit()):
+            ap.error(f"--mesh wants 'tpN', got {args.mesh!r}")
+        # force the host-platform device count while it can still take
+        # effect (before the first jax import — the module top imports only
+        # argparse/os/numpy for exactly this reason); inside benchmarks/run
+        # the driver has already forced devices and jax may be live
+        if "jax" not in sys.modules:
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={args.mesh[2:]}")
 
     out_lines = out_lines if out_lines is not None else []
 
@@ -335,6 +385,8 @@ def main(argv=None, out_lines=None):
         mode = f"{mode}/stop{args.stop_ids}"
     if args.speculate:
         mode = f"{mode}/spec{args.speculate}-{args.drafter}"
+    if args.mesh:
+        mode = f"{mode}/{args.mesh}"
     results = {}
     for scheme in args.schemes.split(","):
         scheme = scheme.strip()
@@ -391,10 +443,17 @@ def run(out_lines, quick: bool = False):
     with observability disabled and asserts 0% perturbation (--obs-check),
     and the shared-prefix + speculative row dumps a Perfetto trace +
     Prometheus snapshot per scheme into experiments/ (--trace) — the CI
-    bench job uploads them as artifacts."""
+    bench job uploads them as artifacts.
+
+    A TENSOR-PARALLEL row (--mesh tp2, needs benchmarks/run.py's forced
+    2-device host platform) re-runs the paged chunked workload sharded and
+    asserts the sharded-serving contract right in the sweep: every
+    deterministic metric byte-identical to the tp=1 row, and the
+    PER-DEVICE kv_bytes_per_token exactly halved."""
     argv = ["--quiet", "--requests", "3" if quick else "6",
             "--tokens", "4", "--slots", "2", "--capacity", "32",
             "--rate", "0.5", "--prompt-mean", "6", "--page-size", "8"]
+    sweep_results = {}
     for extra in (["--contiguous"], ["--paged", "--obs-check"],
                   ["--paged", "--chunk", "4"],
                   ["--paged", "--chunk", "4", "--shared-prefix", "16",
@@ -406,8 +465,29 @@ def run(out_lines, quick: bool = False):
                   ["--paged", "--chunk", "4", "--shared-prefix", "16",
                    "--capacity", "48", "--tokens", "12",
                    "--speculate", "4", "--drafter", "self-full",
-                   "--trace", "experiments/serving_trace.json"]):
-        main(argv + extra, out_lines=out_lines)
+                   "--trace", "experiments/serving_trace.json"],
+                  ["--paged", "--chunk", "4", "--mesh", "tp2"]):
+        sweep_results[tuple(extra)] = main(argv + extra, out_lines=out_lines)
+
+    # sharded-serving gate: tp2 vs the matching tp1 paged/chunk4 row
+    tp1 = sweep_results[("--paged", "--chunk", "4")]
+    tp2 = sweep_results[("--paged", "--chunk", "4", "--mesh", "tp2")]
+    deterministic = ("ticks", "tokens", "ttft_ticks_p50", "ttft_ticks_p99",
+                     "latency_ticks_p50", "latency_ticks_p99",
+                     "req_latency_ticks", "utilization", "gen_tok_mean",
+                     "stopped_early", "prefix_hit_rate", "cached_frac",
+                     "accept_rate", "tokens_per_step", "kv_compression")
+    for scheme, r2 in tp2.items():
+        r1 = tp1[scheme]
+        for m in deterministic:
+            assert r2[m] == r1[m], (
+                f"tp2 row diverged from tp1 on {scheme}/{m}: "
+                f"{r2[m]} vs {r1[m]} — sharded serving must be "
+                f"bit-identical to single-device")
+        assert r2["kv_bytes_per_token"] * 2 == r1["kv_bytes_per_token"], (
+            f"per-device kv_bytes_per_token must scale 1/tp: "
+            f"{scheme}: {r2['kv_bytes_per_token']} * 2 != "
+            f"{r1['kv_bytes_per_token']}")
 
 
 if __name__ == "__main__":

@@ -196,6 +196,14 @@ def main() -> None:
                     help="write this run's serving rows as the new baseline")
     args = ap.parse_args()
 
+    # the serving sweep's tensor-parallel row (--mesh tp2) needs 2 devices;
+    # force them on the host platform BEFORE anything imports jax — this is
+    # metric-neutral for every other row (tick/latency/kv columns are
+    # deterministic and single-device rows never touch device 1)
+    if "jax" not in sys.modules:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_count=2")
+
     out_lines = []
     t0 = time.time()
 

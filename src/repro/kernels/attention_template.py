@@ -528,9 +528,12 @@ def fused_contiguous_attention(
                 t0 = time.perf_counter()
                 jax.block_until_ready(run(plan.block_kv))
                 return time.perf_counter() - t0
+        # kv_n is the LOCAL head count of the operand (a per-shard slice
+        # under tensor parallelism) — it keys the plan so a tp=1 tuning is
+        # never silently reused for a different grid height
         plan = plan_attention_tiles(
             kind="contiguous", family=family, scheme=None, rows=rows,
-            hd=hd, hd_v=hd_v, s_max=S_loc, measure=measure)
+            hd=hd, hd_v=hd_v, s_max=S_loc, kv_heads=kv_n, measure=measure)
         block_kv = plan.block_kv
     if S_loc % block_kv != 0:
         raise ValueError(f"block_kv={block_kv} must divide S_loc={S_loc}")

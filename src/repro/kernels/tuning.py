@@ -121,10 +121,19 @@ def attn_vmem_usage(rows: int, block_kv: int, hd: int,
 
 def attn_plan_key(*, kind: str, family: str, scheme: Optional[str],
                   rows: int, hd: int, hd_v: int, s_max: int,
-                  page: int = 0) -> str:
-    """Canonical per-(shape, family, scheme) cache key."""
+                  page: int = 0, kv_heads: int = 0,
+                  budget: int = VMEM_BYTES) -> str:
+    """Canonical per-(shape, family, scheme) cache key.
+
+    ``kv_heads`` is the LOCAL (per-shard) kv-head count of the launching
+    grid and ``budget`` the VMEM budget the plan was selected under: a
+    tensor-parallel engine hands each device a head SLICE of the cache, so
+    a plan tuned at tp=1 (full heads, default budget) must never be
+    silently served for a tp=4 slice — different grid height, different
+    occupancy. 0 = unspecified (pre-sharding callers), kept distinct from
+    any real count."""
     return (f"{kind}/{family}/{scheme or 'bf16'}/rows{rows}/hd{hd}"
-            f"v{hd_v}/s{s_max}/p{page}")
+            f"v{hd_v}/s{s_max}/p{page}/kv{kv_heads}/vb{budget}")
 
 
 class AutotuneCache:
@@ -184,7 +193,7 @@ def _divisors_desc(n: int):
 
 def plan_attention_tiles(*, kind: str, family: str, scheme: Optional[str],
                          rows: int, hd: int, hd_v: Optional[int] = None,
-                         s_max: int, page: int = 0,
+                         s_max: int, page: int = 0, kv_heads: int = 0,
                          budget: int = VMEM_BYTES,
                          cache: Optional[AutotuneCache] = None,
                          measure: Optional[Callable[[AttnTilePlan], float]]
@@ -199,11 +208,14 @@ def plan_attention_tiles(*, kind: str, family: str, scheme: Optional[str],
     callable re-ranks the fitting candidates by measured seconds
     (ties break to the larger block) and is never consulted on a cache
     hit already measured. Results persist via ``cache`` (defaults to the
-    process-wide `get_autotune_cache`)."""
+    process-wide `get_autotune_cache`). ``kv_heads`` is the launching
+    grid's LOCAL kv-head count (per-shard under tensor parallelism) and
+    joins ``budget`` in the cache key — see `attn_plan_key`."""
     hd_v = hd if hd_v is None else hd_v
     cache = cache if cache is not None else get_autotune_cache()
     key = attn_plan_key(kind=kind, family=family, scheme=scheme, rows=rows,
-                        hd=hd, hd_v=hd_v, s_max=s_max, page=page)
+                        hd=hd, hd_v=hd_v, s_max=s_max, page=page,
+                        kv_heads=kv_heads, budget=budget)
     hit = cache.get(key)
     if hit is not None and (measure is None or hit.source == "measured"):
         return hit

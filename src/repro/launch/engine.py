@@ -139,7 +139,7 @@ class ServeEngine:
 
     def __init__(self, arch: str, *, reduced: bool = True,
                  scheme: str = "fp5.33-e2m3", strategy: str = "set_lsb",
-                 impl: str = "ref", mesh_kind: str = "none",
+                 impl: str = "ref", mesh_kind: str = "none", mesh=None,
                  slots: int = 4, capacity: int = 128, max_queue: Optional[int] = None,
                  cache_config: Optional[CacheConfig] = None,
                  prefill_chunk: int = 1, token_budget: Optional[int] = None,
@@ -189,7 +189,15 @@ class ServeEngine:
                                 min_elements=1 << 10)
         self.rcfg = RunConfig(model=cfg, seq_len=capacity, global_batch=slots,
                               mode="decode", quant=quant)
-        self.mesh = make_driver_mesh(mesh_kind)
+        # tensor-parallel serving: pass an explicit mesh (e.g.
+        # mesh.make_serving_mesh(tp)) and the jitted step runs sharded —
+        # weight planes placed by the serving layout, paged pools
+        # head-sharded over the model axis, token streams bit-identical to
+        # the single-device engine. Default: the mesh_kind driver mesh
+        # (1x1 for "none").
+        if mesh is not None and "model" not in mesh.axis_names:
+            raise ValueError("ServeEngine mesh needs a 'model' axis")
+        self.mesh = mesh if mesh is not None else make_driver_mesh(mesh_kind)
 
         with use_mesh(self.mesh):
             tp = self.mesh.shape["model"]
@@ -209,6 +217,13 @@ class ServeEngine:
             # attention template (kernels.attention_template)
             self.cache = make_cache(cfg, slots, capacity, tp=tp,
                                     dtype=jnp.bfloat16, cache_cfg=ccfg)
+            # per-device KV residency: a head-sharded paged pool (kv heads
+            # divide the model axis — the same rule steps.py/pool_shardings
+            # apply) keeps 1/tp of the pool on each device, so all
+            # kv-bytes-per-token accounting below is PER DEVICE
+            _dims = model_dims(cfg, tp)
+            self._kv_shards = (tp if (ccfg.paged and tp > 1
+                                      and _dims.kv % tp == 0) else 1)
             # arg shapes are kept for obs.cost.hlo_step_cost: lowering the
             # jitted step at its serving shapes yields the compiled
             # program's achieved per-tick HBM/FLOP cost
@@ -267,7 +282,8 @@ class ServeEngine:
         m = self.metrics
         self.signature = engine_step_signature(
             cfg, self.rcfg, cache_cfg=ccfg,
-            chunk=self.step_chunk, speculate_k=self.speculate_k)
+            chunk=self.step_chunk, speculate_k=self.speculate_k,
+            mesh=self.mesh)
         m.gauge("serve_step_signature_info",
                 "engine-step signature (value is always 1)",
                 tuple(self.signature)).labels(**self.signature).set(1)
@@ -323,7 +339,7 @@ class ServeEngine:
             self.cost_model = build_cost_model(
                 cfg, scheme, ccfg,
                 kv=dims.kv, hd=dims.hd, tp=self.mesh.shape["model"],
-                signature=self.signature)
+                kv_shards=self._kv_shards, signature=self.signature)
             self._kv_bpt = float(self.kv_bytes_per_token())
             self._m_floor_b = m.counter(
                 "serve_floor_hbm_bytes_total",
@@ -808,12 +824,16 @@ class ServeEngine:
 
     # ----------------------------------------------------------- accounting
     def kv_bytes_per_token(self) -> int:
-        """Cache bytes one token occupies across all layers, in the active
-        cache mode (bf16 slot/page storage, or AMS packed planes)."""
+        """PER-DEVICE cache bytes one token occupies across all layers, in
+        the active cache mode (bf16 slot/page storage, or AMS packed
+        planes). On a head-sharded tp>1 mesh each device holds kv/tp heads
+        of every page, so this scales as 1/tp — the residency/bandwidth
+        number the paper's wins are about. tp=1: the full-pool bytes,
+        unchanged."""
         from repro.cache.pool import pool_bytes_per_token
         dims = model_dims(self.cfg, self.mesh.shape["model"])
         return self.cfg.num_layers * pool_bytes_per_token(
-            dims.kv, dims.hd, self.cache_cfg)
+            dims.kv // self._kv_shards, dims.hd, self.cache_cfg)
 
     def kv_compression_vs_bf16(self) -> float:
         """bf16-cache bytes / active-mode bytes per token (1.0 for bf16)."""

@@ -75,6 +75,15 @@ def make_driver_mesh(kind: str = "none"):
     return make_production_mesh(multi_pod=(kind == "multi"))
 
 
+def make_serving_mesh(tp: int = 1):
+    """(1, tp) mesh for tensor-parallel serving: one replica, `tp` model
+    shards. Pass the result to ``ServeEngine(mesh=...)`` /
+    ``build_engine_step`` — needs `tp` visible devices (on CPU, force them
+    with XLA_FLAGS=--xla_force_host_platform_device_count=N before the
+    first jax import)."""
+    return _mk_mesh((1, tp), ("data", "model"))
+
+
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for multi-device unit tests (8 forced host devices)."""
     return _mk_mesh(shape, axes)

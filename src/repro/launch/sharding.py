@@ -39,13 +39,21 @@ def _path_names(path):
 
 
 def param_spec(path, leaf, *, fsdp: Optional[str], tp: str = "model",
-               n_stack: int = 0, moe: str = "ep") -> P:
+               n_stack: int = 0, moe: str = "ep",
+               serve_n_shard: bool = False) -> P:
     """PartitionSpec for one parameter leaf.
 
     n_stack: number of leading stacked dims (layer-scan G).
     moe: 'ep' shards the expert dim over `model` (serving / expert-parallel);
          'tp' leaves experts unsharded and TP-shards each expert's FFN dims
-         like a dense FFN (training path — see models/moe.py:moe_tp)."""
+         like a dense FFN (training path — see models/moe.py:moe_tp).
+    serve_n_shard: the ENGINE-STEP layout — classify row-parallel linears
+         column-style too, so plain ``w``/``b`` leaves follow the same
+         N-over-model rule the packed quantized planes already use. Every
+         decode contraction then keeps its K dim device-complete, which is
+         what makes sharded streams bit-identical to single-device streams
+         (no split f32 reductions, no psum): the only cross-device traffic
+         is an exact all-gather of decode-sized activations."""
     names = _path_names(path)
     last = names[-1]
     parent = names[-2] if len(names) >= 2 else ""
@@ -69,7 +77,7 @@ def param_spec(path, leaf, *, fsdp: Optional[str], tp: str = "model",
         if name in COL_PARALLEL:
             return "col"
         if name in ROW_PARALLEL:
-            return "row"
+            return "col" if serve_n_shard else "row"
         return "rep"
 
     # --- packed quantized planes: parent is the linear name.
@@ -122,14 +130,15 @@ def param_spec(path, leaf, *, fsdp: Optional[str], tp: str = "model",
 
 
 def params_shardings(params_shape, mesh, *, fsdp: bool, stacked_key="layers",
-                     moe: str = "ep"):
+                     moe: str = "ep", serve_n_shard: bool = False):
     """Pytree of NamedSharding matching a params(-shaped) pytree."""
     fsdp_axis = "data" if fsdp else None
 
     def visit(path, leaf):
         names = _path_names(path)
         n_stack = 1 if names and names[0] == stacked_key else 0
-        spec = param_spec(path, leaf, fsdp=fsdp_axis, n_stack=n_stack, moe=moe)
+        spec = param_spec(path, leaf, fsdp=fsdp_axis, n_stack=n_stack, moe=moe,
+                          serve_n_shard=serve_n_shard)
         return NamedSharding(mesh, spec)
 
     return jax.tree_util.tree_map_with_path(visit, params_shape)
@@ -163,3 +172,29 @@ def cache_shardings(cache_shape, mesh, *, dp, seq_shard: bool,
         return NamedSharding(mesh, spec)
 
     return jax.tree_util.tree_map_with_path(visit, cache_shape)
+
+
+def pool_spec(leaf, tp: str = "model") -> P:
+    """PartitionSpec for one paged-pool plane, HEAD-SHARDED over `model`.
+
+    Every pool leaf — bf16 ``k``/``v`` [.., num_pages, page, kv, hd] and the
+    packed AMS ``hi``/``lsb``/``scale`` planes alike — carries the kv-head
+    dim at axis ndim-2, so one rule shards them all: split kv heads over the
+    model axis, keep pages / page rows / packed words whole. Page ids stay
+    head-dimension-free, which is why the host-side allocator, prefix-cache
+    index and block tables never see the mesh."""
+    return P(*([None] * (leaf.ndim - 2)), tp, None)
+
+
+def pool_shardings(cache_shape, mesh, tp: str = "model"):
+    """NamedShardings for a paged cache pytree: kv heads over `model` when
+    they divide the axis size, replicated otherwise (tp=1, or a head count
+    the mesh cannot split — correctness never depends on divisibility)."""
+    ntp = mesh.shape[tp] if tp in mesh.axis_names else 1
+
+    def visit(leaf):
+        if ntp > 1 and leaf.ndim >= 2 and leaf.shape[-2] % ntp == 0:
+            return NamedSharding(mesh, pool_spec(leaf, tp))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(visit, cache_shape)

@@ -355,9 +355,21 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
     followed by the slot's private insert-target pages. The step needs no
     distinction — reads walk the whole row, and writes only ever land in
     private pages because the engine starts each slot's positions at its
-    cached length (asserted host-side per tick). Pools are replicated over
-    the mesh (sharding pools over kv heads is the documented next step);
-    the slot-masking contract is unchanged.
+    cached length (asserted host-side per tick). The slot-masking contract
+    is unchanged.
+
+    TENSOR-PARALLEL (``mesh`` with model-axis size tp > 1): the paged step
+    runs sharded with BIT-IDENTICAL streams to tp=1. Weight planes are
+    placed by the serving layout (`sharding.params_shardings` with
+    ``serve_n_shard=True`` — every linear N-sharded, so no contraction is
+    ever split across devices), the page pools are HEAD-SHARDED over the
+    model axis (`sharding.pool_shardings`; insert/truncate/attend run on
+    local head slices under shard_map — pages never cross the mesh), the
+    residual stream and the logits are pinned replicated so the f32
+    norm/softmax reductions stay device-complete, and block tables /
+    positions / per-slot lengths replicate. The host-side scheduler,
+    `PageAllocator` and prefix-cache index are device-count-agnostic:
+    page ids are head-dimension-free.
 
     A CONTIGUOUS ``cache_cfg`` threads through too: its ``impl`` field
     selects the attention lowering for the GQA/MLA decode cores ("ref" =
@@ -387,6 +399,17 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
             f"speculate_k={speculate_k} needs chunk >= {speculate_k + 1} "
             f"(one fed token + k drafts per slot), got chunk={chunk}")
 
+    def _rep_logits(logits):
+        """Pin logits replicated over the model axis before the epilogue:
+        sampling's softmax/cumsum (and verify's accept rule) reduce over
+        the vocab dim — a model-sharded vocab would split those f32
+        reductions and break bit-identity with tp=1. At tp=1: no-op."""
+        if ctx.tp <= 1:
+            return logits
+        spec_ = P(*((dp,) + (None,) * (logits.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            logits, NamedSharding(mesh, spec_))
+
     def core(params, token, pos, cache, block_tables=None, embeds=None,
              embed_mask=None, nvalid=None, samp=None, ndraft=None):
         if spec:
@@ -397,6 +420,7 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
                 embed_mask=embed_mask, block_tables=block_tables,
                 cache_cfg=cache_cfg, nvalid=nvalid, ndraft=ndraft,
                 n_logits=speculate_k + 1)
+            logits = _rep_logits(logits)
             out, n_emit, accepted, done = verify_tokens(
                 logits, token, nvalid, ndraft, samp, speculate_k)
             # un-insert the rejected suffix IN-PROGRAM: positions
@@ -412,6 +436,7 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
             params, token, cache, pos, cfg, tp=ctx.tp, policy=policy,
             ctx=ctx, dtype=jnp.bfloat16, embeds=embeds, embed_mask=embed_mask,
             block_tables=block_tables, cache_cfg=cache_cfg, nvalid=nvalid)
+        logits = _rep_logits(logits)
         if samp is not None:
             from repro.launch.sampling import sample_tokens
             next_token, done = sample_tokens(logits, samp)
@@ -419,13 +444,16 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
     pshape = quantized_param_shapes(cfg, rcfg, ctx.tp)
-    p_shard = SH.params_shardings(pshape, mesh, fsdp=False)
+    p_shard = SH.params_shardings(pshape, mesh, fsdp=False,
+                                  serve_n_shard=True)
     cache_shape = jax.eval_shape(
         lambda: make_cache(cfg, B, S, tp=ctx.tp, dtype=jnp.bfloat16,
                            cache_cfg=cache_cfg))
     if paged:
-        c_shard = jax.tree.map(lambda _: NamedSharding(mesh, P()),
-                               cache_shape)
+        # kv heads over the model axis (replicated fallback when they
+        # don't divide it) — must agree with models.transformer's
+        # pool_head_sharded/shard_map wrap, and it does: same rule
+        c_shard = SH.pool_shardings(cache_shape, mesh)
     else:
         c_shard = SH.cache_shardings(cache_shape, mesh, dp=dp, seq_shard=True)
     tok_shard = NamedSharding(mesh, P(dp))
@@ -495,16 +523,19 @@ def build_engine_step(mesh, cfg: ModelConfig, rcfg: RunConfig,
 
 
 def engine_step_signature(cfg: ModelConfig, rcfg: RunConfig, cache_cfg=None,
-                          chunk: int = 1, speculate_k: int = 0):
+                          chunk: int = 1, speculate_k: int = 0, mesh=None):
     """Canonical identity of one jitted engine-step program — the key the
     obs subsystem attributes per-tick cost under (`obs.cost`) and the
     label set exported on ``serve_step_signature_info``. Two engines with
     equal signatures compile the same step: cache mode x attention impl x
-    chunk x speculate_k x weight scheme x slot count. ``impl`` is the
-    attention lowering ("ref" = plain-XLA flash decode, "pallas"/
+    chunk x speculate_k x weight scheme x slot count x mesh shape. ``impl``
+    is the attention lowering ("ref" = plain-XLA flash decode, "pallas"/
     "pallas_interpret" = the fused template of
     `kernels.attention_template`) — it now applies to contiguous caches
-    too, so it is part of the compiled program's identity."""
+    too, so it is part of the compiled program's identity. ``tp`` is the
+    model-axis size of the serving mesh: a sharded step is a different
+    program (per-device weight/KV residency — see `obs.cost`'s per-device
+    floors) even though its token streams are bit-identical."""
     return dict(
         arch=cfg.name,
         scheme=rcfg.quant.scheme if rcfg.quantized else "fp16",
@@ -515,6 +546,8 @@ def engine_step_signature(cfg: ModelConfig, rcfg: RunConfig, cache_cfg=None,
         slots=rcfg.global_batch,
         chunk=chunk,
         speculate_k=speculate_k,
+        tp=(int(mesh.shape["model"])
+            if mesh is not None and "model" in mesh.axis_names else 1),
     )
 
 

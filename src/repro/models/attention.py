@@ -275,28 +275,49 @@ def gqa_decode_core(q, k_new, v_new, cache_k, cache_v, pos, *,
     return o, cache_k, cache_v
 
 
+def gqa_paged_core(q, k_new, v_new, pool, pos, block_tables, *, cache_cfg,
+                   scale=None):
+    """Paged insert + attend core. q: [B, H, hd]; k/v_new: [B, 1, kv, hd];
+    ``pool`` is one layer's page pool. The kv_map is recomputed from the
+    OPERAND shapes, not the global dims: under the head-sharded shard_map
+    wrap (transformer.py) this core sees each device's local head slice,
+    and the group-major layout keeps the local map the same
+    ``arange(H) // (H // kv)`` formula at local counts — so quantize,
+    scatter-insert and attend all run device-local, and no page ever
+    crosses the mesh."""
+    from repro.cache import paged_attend, paged_insert
+
+    pool = paged_insert(pool, k_new, v_new, pos, block_tables, cache_cfg)
+    kvm = kv_index_map(q.shape[-2], q.shape[-2], k_new.shape[-2])
+    lengths = jnp.where(pos >= 0, pos + 1, 0)
+    o = paged_attend(q, pool, lengths, block_tables, cache_cfg,
+                     kv_map=kvm, scale=scale)
+    return o, pool
+
+
 def gqa_attn_decode_paged(p, x, pool, pos, block_tables, cfg, dims, *,
-                          policy=None, cache_cfg=None):
+                          policy=None, cache_cfg=None, core_wrap=None):
     """Paged-cache decode step: x [B, 1, D]; ``pool`` is one layer's page
     pool (repro.cache.pool layout); ``block_tables`` [B, max_pages] int32.
 
     Each slot's new K/V vector is quantized ONCE at insert (paged-AMS) or
     stored bf16 (paged-bf16); attention walks the block table via the
     configured impl (``ref`` gather-dequantize oracle or the Pallas
-    kernel). Returns (out, new pool)."""
-    from repro.cache import paged_attend, paged_insert
-
+    kernel). ``core_wrap(core_fn)`` lets the caller shard_map the
+    insert+attend core over local kv-head slices (transformer.py passes a
+    wrapper when the pool is head-sharded over the model axis). Returns
+    (out, new pool)."""
+    import functools
     B = x.shape[0]
     hd = dims.hd
     pos = jnp.asarray(pos, jnp.int32)
     positions = pos[:, None] if pos.ndim == 1 else jnp.full((B, 1), pos,
                                                             jnp.int32)
     q, k, v = gqa_qkv(p, x, cfg, dims, positions, policy)
-    pool = paged_insert(pool, k, v, pos, block_tables, cache_cfg)
-    kvm = kv_index_map(dims.H, dims.H_true, dims.kv)
-    lengths = jnp.where(pos >= 0, pos + 1, 0)
-    o = paged_attend(q[:, 0], pool, lengths, block_tables, cache_cfg,
-                     kv_map=kvm)
+    core = functools.partial(gqa_paged_core, cache_cfg=cache_cfg)
+    if core_wrap is not None:
+        core = core_wrap(core)
+    o, pool = core(q[:, 0], k, v, pool, pos, block_tables)
     o = o * dims.head_mask[None, :, None].astype(o.dtype)
     o = o.reshape(B, 1, dims.H * hd)
     return apply_linear(p["wo"], o, policy), pool
@@ -378,24 +399,41 @@ def gqa_attn_decode_chunk(p, x, cache_k, cache_v, pos, nvalid, cfg, dims, *,
     return apply_linear(p["wo"], o, policy), (cache_k, cache_v)
 
 
+def gqa_paged_core_chunk(q, k_new, v_new, pool, pos, block_tables, nvalid, *,
+                         cache_cfg, scale=None):
+    """Chunked paged insert + attend core. q: [B, c, H, hd]; k/v_new
+    [B, c, kv, hd]. Same local-shape kv_map discipline as
+    `gqa_paged_core` — runs unchanged on a device-local head slice under
+    the head-sharded shard_map wrap."""
+    from repro.cache import paged_attend, paged_insert
+
+    pool = paged_insert(pool, k_new, v_new, pos, block_tables, cache_cfg,
+                        nvalid=nvalid)
+    kvm = kv_index_map(q.shape[-2], q.shape[-2], k_new.shape[-2])
+    lengths = chunk_lengths(pos, nvalid, q.shape[1])
+    o = paged_attend(q, pool, lengths, block_tables, cache_cfg,
+                     kv_map=kvm, scale=scale)
+    return o, pool
+
+
 def gqa_attn_decode_paged_chunk(p, x, pool, pos, nvalid, block_tables, cfg,
-                                dims, *, policy=None, cache_cfg=None):
+                                dims, *, policy=None, cache_cfg=None,
+                                core_wrap=None):
     """Paged ragged decode: x [B, c, D]; the chunk's K/V vectors are packed
     into the layer pool in ONE multi-token scatter per plane
     (`cache.pool.paged_insert` with nvalid), then every query attends the
-    block table with its own length through the configured impl."""
-    from repro.cache import paged_attend, paged_insert
-
+    block table with its own length through the configured impl.
+    ``core_wrap`` as in `gqa_attn_decode_paged`."""
+    import functools
     B, c, _ = x.shape
     hd = dims.hd
     pos = jnp.asarray(pos, jnp.int32)
     positions = jnp.maximum(pos[:, None] + jnp.arange(c, dtype=jnp.int32), 0)
     q, k, v = gqa_qkv(p, x, cfg, dims, positions, policy)
-    pool = paged_insert(pool, k, v, pos, block_tables, cache_cfg,
-                        nvalid=nvalid)
-    kvm = kv_index_map(dims.H, dims.H_true, dims.kv)
-    lengths = chunk_lengths(pos, nvalid, c)
-    o = paged_attend(q, pool, lengths, block_tables, cache_cfg, kv_map=kvm)
+    core = functools.partial(gqa_paged_core_chunk, cache_cfg=cache_cfg)
+    if core_wrap is not None:
+        core = core_wrap(core)
+    o, pool = core(q, k, v, pool, pos, block_tables, nvalid)
     o = o * dims.head_mask[None, None, :, None].astype(o.dtype)
     o = o.reshape(B, c, dims.H * hd)
     return apply_linear(p["wo"], o, policy), pool

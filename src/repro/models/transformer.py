@@ -177,6 +177,67 @@ def _seq_core_wrap(ctx: ParallelCtx, n_caches: int):
     return wrap
 
 
+def pool_head_sharded(ctx: Optional[ParallelCtx], pool) -> bool:
+    """True when the paged pool should run head-sharded over the model
+    axis: a real tp>1 mesh and a kv-head count (axis ndim-2 of every pool
+    plane) the axis divides. Non-divisible head counts stay replicated —
+    the engine's `pool_shardings` applies the same rule, so the shard_map
+    wrap and the pool placement always agree."""
+    if ctx is None or ctx.mesh is None or ctx.tp <= 1:
+        return False
+    kv = jax.tree_util.tree_leaves(pool)[0].shape[-2]
+    return kv % ctx.tp == 0
+
+
+def _paged_core_wrap(ctx: ParallelCtx, pool, chunked: bool):
+    """shard_map wrapper for the paged insert+attend core with the page
+    pool HEAD-SHARDED over the model axis.
+
+    Every pool plane — bf16 ``k``/``v`` [P, page, kv, hd] and the packed
+    AMS ``hi``/``lsb``/``scale`` planes alike — splits on its kv-head axis
+    (ndim-2); q and the new K/V vectors split on their head axes (the
+    group-major projection layout keeps each q-head group on the device
+    holding its kv head); pos / nvalid / block tables replicate. Inside
+    the region quantize, scatter-insert and attend all see LOCAL head
+    slices, so no page is ever gathered or resharded — the mesh only moves
+    decode-sized activations, never KV bytes."""
+    tp = ctx.tp_axis
+    pool_specs = jax.tree_util.tree_map(
+        lambda leaf: P(*([None] * (leaf.ndim - 2)), tp, None), pool)
+    head4 = P(None, None, tp, None)
+    q_spec = head4 if chunked else P(None, tp, None)
+    bt = P(None, None)
+    if chunked:  # (q, k_new, v_new, pool, pos, block_tables, nvalid)
+        in_specs = (q_spec, head4, head4, pool_specs, P(), bt, P())
+    else:        # (q, k_new, v_new, pool, pos, block_tables)
+        in_specs = (q_spec, head4, head4, pool_specs, P(), bt)
+    out_specs = (q_spec, pool_specs)
+
+    def wrap(core):
+        return ctx.shard_map(core, in_specs=in_specs, out_specs=out_specs)
+    return wrap
+
+
+def _replicate_model(x, ctx: Optional[ParallelCtx]):
+    """Pin an activation replicated over the model axis (batch stays on the
+    DP axes). The bit-exact TP serving layout N-shards every linear, so
+    after each residual add this constraint is the ONLY cross-device step:
+    an exact all-gather of a decode-sized activation. It keeps the next
+    rms_norm's f32 mean over D device-complete — a model-sharded D would
+    split that reduction and change the f32 rounding order vs tp=1."""
+    if ctx is None or ctx.mesh is None or ctx.tp <= 1:
+        return x
+    dp = ctx.dp_axes if ctx.dp_axes else None
+    import numpy as np
+    if dp is not None:
+        n = int(np.prod([ctx.mesh.shape[a] for a in dp]))
+        if x.shape[0] % n != 0:
+            dp = None
+    spec = P(*((dp,) + (None,) * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, spec))
+
+
 def block_decode(p, x, cache, pos, kind, cfg, dims, *, policy=None,
                  ctx: Optional[ParallelCtx], block_tables=None,
                  cache_cfg=None):
@@ -204,10 +265,12 @@ def block_decode(p, x, cache, pos, kind, cfg, dims, *, policy=None,
         x = x + out
         cache = {"kv": ckv}
     elif paged:
+        wrap = (_paged_core_wrap(ctx, cache, chunked=False)
+                if pool_head_sharded(ctx, cache) else None)
         out, cache = A.gqa_attn_decode_paged(
             p["attn"], h, cache, pos, block_tables, cfg, dims,
-            policy=policy, cache_cfg=cache_cfg)
-        x = x + out
+            policy=policy, cache_cfg=cache_cfg, core_wrap=wrap)
+        x = _replicate_model(x + out, ctx)
     else:
         window = cfg.sliding_window if kind == "attn" else 0
         wrap = _seq_core_wrap(ctx, 2) if seq_sharded else None
@@ -223,6 +286,8 @@ def block_decode(p, x, cache, pos, kind, cfg, dims, *, policy=None,
         x = x + y
     else:
         x = x + F.ffn_apply(p["ffn"], h2, cfg.ffn_activation, policy)
+    if paged:
+        x = _replicate_model(x, ctx)
     return x, cache
 
 
@@ -271,10 +336,12 @@ def block_decode_chunk(p, x, cache, pos, nvalid, kind, cfg, dims, *,
         x = x + out
         cache = {"kv": ckv}
     elif paged:
+        wrap = (_paged_core_wrap(ctx, cache, chunked=True)
+                if pool_head_sharded(ctx, cache) else None)
         out, cache = A.gqa_attn_decode_paged_chunk(
             p["attn"], h, cache, pos, nvalid, block_tables, cfg, dims,
-            policy=policy, cache_cfg=cache_cfg)
-        x = x + out
+            policy=policy, cache_cfg=cache_cfg, core_wrap=wrap)
+        x = _replicate_model(x + out, ctx)
     else:
         wrap = _seq_core_wrap_chunk(ctx, 2) if seq_sharded else None
         out, (ck, cv) = A.gqa_attn_decode_chunk(
@@ -288,6 +355,8 @@ def block_decode_chunk(p, x, cache, pos, nvalid, kind, cfg, dims, *,
         x = x + y
     else:
         x = x + F.ffn_apply(p["ffn"], h2, cfg.ffn_activation, policy)
+    if paged:
+        x = _replicate_model(x, ctx)
     return x, cache
 
 

@@ -69,7 +69,11 @@ def kv_vector_bytes_ideal(hd: int, scheme: AMSFormat) -> float:
 # ------------------------------------------------------------ cost model
 @dataclasses.dataclass
 class StepCostModel:
-    """Analytic per-token costs of one engine-step signature."""
+    """Analytic per-token costs of one engine-step signature. All
+    weight/KV byte fields are PER-DEVICE: ``weight_bytes`` divides by tp,
+    and the KV floors divide by the head-shard count when the paged pool
+    is head-sharded over the model axis (`build_cost_model` ``kv_shards``),
+    matching the per-device achieved bytes the engine accounts."""
 
     signature: Dict[str, object]
     weight_bytes: float            # packed weight working set (read per tick)
@@ -145,18 +149,30 @@ class StepCostModel:
 
 def build_cost_model(cfg, scheme: str, cache_cfg=None, *,
                      kv: Optional[int] = None, hd: Optional[int] = None,
-                     tp: int = 1,
+                     tp: int = 1, kv_shards: int = 1,
                      signature: Optional[Dict[str, object]] = None,
                      ) -> StepCostModel:
     """Cost model for one engine configuration. ``scheme`` is the WEIGHT
     scheme ("fp16" = unquantized bf16 weights); ``cache_cfg`` selects the
     KV floors (None / contiguous / paged_bf16 -> bf16 KV). ``kv``/``hd``
     override the config's KV-head geometry with the engine's served dims
-    (`models.model_dims` pads heads under tensor parallelism)."""
+    (`models.model_dims` pads heads under tensor parallelism).
+
+    ``kv_shards`` makes the KV floors PER-DEVICE on a head-sharded serving
+    mesh: with kv heads split over a model axis of size tp, each device
+    writes/reads kv/tp heads per token, so every format/ideal/bf16/dequant
+    floor divides by it. The engine passes its own head-sharding rule
+    (tp when the paged pool splits, else 1), matching the per-device
+    achieved bytes it measures — `kv_vs_floor` stays a ratio of like
+    quantities (1.0-ish) instead of over-reporting tp x traffic."""
     pc = param_count(cfg)
     wbits = SCHEMES[scheme].effective_bits if scheme in SCHEMES else 16.0
     kv = cfg.num_kv_heads if kv is None else kv
     hd = cfg.head_dim if hd is None else hd
+    if kv_shards > 1:
+        if kv % kv_shards:
+            raise ValueError(f"kv_shards={kv_shards} must divide kv={kv}")
+        kv //= kv_shards
     bf16_tok = 2 * kv * (2 * hd)
     dequant = 0.0
     if cache_cfg is not None and getattr(cache_cfg, "quantized", False):
