@@ -102,6 +102,12 @@ GATED = {
     # emitting round is a real speculation regression
     "accept_rate": ("lower", 0.15),
     "tokens_per_step": ("lower", 0.15),
+    # preemption (serving/overload row): scheduling decisions are exact
+    # given the seed — more preemptions is scheduler thrash, and a LOWER
+    # count here means the priority policy stopped firing (the row's
+    # in-run assert additionally pins preemptive p99 TTFT < head-of-line)
+    "preemptions": ("higher", 0.15),
+    "resumes": ("higher", 0.15),
     # kernel_attn rows (fused template vs ref, StepCostModel accounting —
     # exact analytic bytes): more achieved bytes per causal-floor byte is a
     # lowering regression, and ANY dequant_kb on a fused row means packed

@@ -42,10 +42,9 @@ import sys
 
 import numpy as np
 
-from repro.cache import CacheConfig
-from repro.launch.engine import ServeEngine
-from repro.launch.sampling import SamplingParams
 from repro.obs import ticker_line
+from repro.serving import (CacheConfig, EngineConfig, SamplingParams,
+                           ServeEngine)
 
 SYS_LEN = 16          # shared system prompt: two full 8-token pages
 PAGED = "--contiguous" not in sys.argv[1:]
@@ -69,9 +68,8 @@ def drive(prefix_cache: bool, ticker: bool = False):
     cache_config = (CacheConfig(kind="paged_ams", page_size=8,
                                 prefix_cache=prefix_cache)
                     if PAGED else None)
-    eng = ServeEngine("qwen2-7b", reduced=True, scheme="fp5.33-e2m3",
-                      slots=2, capacity=48, seed=0, verbose=True,
-                      cache_config=cache_config)
+    eng = ServeEngine(EngineConfig(slots=2, capacity=48, verbose=True,
+                                   cache=cache_config))
     rng = np.random.default_rng(0)   # fresh rng: identical prompts per run
     sys_prompt = rng.integers(0, eng.cfg.vocab_size, SYS_LEN)
     requests = []
@@ -137,10 +135,9 @@ def drive_spec(speculate_k: int):
     requests over a shared system prompt, same cache mode as above."""
     cache_config = (CacheConfig(kind="paged_ams", page_size=8)
                     if PAGED else None)
-    eng = ServeEngine("qwen2-7b", reduced=True, scheme="fp5.33-e2m3",
-                      slots=2, capacity=48, seed=0,
-                      speculate_k=speculate_k, drafter="self-full",
-                      cache_config=cache_config)
+    eng = ServeEngine(EngineConfig(slots=2, capacity=48,
+                                   speculate_k=speculate_k,
+                                   drafter="self-full", cache=cache_config))
     rng = np.random.default_rng(7)   # fresh rng: identical prompts per run
     sys_prompt = rng.integers(0, eng.cfg.vocab_size, SYS_LEN)
     reqs = []

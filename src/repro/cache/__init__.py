@@ -28,12 +28,15 @@ from .allocator import PageAllocator, prefix_page_hashes  # noqa: F401
 from .config import CACHE_KINDS, PAGED_KINDS, CacheConfig  # noqa: F401
 from .pool import (  # noqa: F401
     compression_vs_bf16,
+    extract_pages,
     gather_kv,
     gather_pages,
+    host_bytes,
     make_gqa_page_pool,
     paged_insert,
     paged_truncate,
     pool_bytes_per_token,
+    restore_pages,
 )
 from .ref import paged_attention_ref  # noqa: F401
 

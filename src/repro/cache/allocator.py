@@ -24,10 +24,24 @@ refcount drains to zero keep their cached content in an LRU until memory
 pressure reclaims them (least-recently-released first).
 
 Pages are reserved for a request's WORST-CASE footprint at admission
-(`ceil(kv_need / page_size)` pages), keeping the engine preemption-free,
-but only the UNCACHED page count charges the free budget. `free` raises on
-an unknown request id — a double free would otherwise silently corrupt the
-free list.
+(`ceil(kv_need / page_size)` pages), but only the UNCACHED page count
+charges the free budget. `free` raises on an unknown request id — a double
+free would otherwise silently corrupt the free list.
+
+Host spill tier (PR 10): one layer BELOW eviction. When memory pressure
+reclaims a cached-evictable page and a host tier is configured
+(`host_spill_pages` > 0 and the engine bound a `spill_fn`), the page's
+packed planes move to a host-memory LRU keyed by the same block hash
+instead of being dropped. Prefix matching then extends over host-resident
+hashes: a later request with that prefix draws a FRESH device page, the
+(page, host content) pair is queued on `pending_restores` for the engine to
+scatter back before its first step, and the page re-enters the index — so
+a host hit still skips prefill, at the cost of one host->device copy
+instead of recompute. Preemption (`preempt`/`resume`) releases a victim's
+pages past its shared prefix while the engine snapshots their content onto
+the request itself; `resume` re-extends with fresh pages for the engine to
+restore. AMS planes travel packed in both directions, so every round trip
+is bit-exact.
 
 Page index 0 is a valid data page like any other; block-table rows are
 padded with 0 for unused entries. That is safe because attention masks
@@ -72,11 +86,22 @@ class PageAllocator:
     """Refcounting allocator over `num_pages` fixed-size pages with a
     block-hash index of cached, evictable prefix pages (module docstring)."""
 
-    def __init__(self, num_pages: int, page_size: int, metrics=None):
+    def __init__(self, num_pages: int, page_size: int, metrics=None,
+                 host_spill_pages: int = 0):
         if num_pages < 1:
             raise ValueError("num_pages must be >= 1")
         self.num_pages = num_pages
         self.page_size = page_size
+        # host spill tier: block hash -> host-side page pytree (packed
+        # planes), least recently spilled first. Active only when sized AND
+        # the engine bound `spill_fn(page) -> host pytree` (the allocator
+        # itself never touches device memory).
+        self.host_spill_pages = host_spill_pages
+        self.spill_fn = None
+        self._host: "OrderedDict[bytes, object]" = OrderedDict()
+        # (device page, host content) pairs the engine must scatter back
+        # into the pool before the owning request's next step
+        self.pending_restores: List[Tuple[int, object]] = []
         # telemetry (repro.obs): the engine passes its registry; a bare
         # allocator gets the shared no-op instruments. Occupancy is
         # exported as callback gauges so collection always sees live state.
@@ -100,6 +125,15 @@ class PageAllocator:
                 fn=lambda: self.cached_pages)
         m.gauge("alloc_pages_free", "reclaimable supply (free + evictable)",
                 fn=lambda: self.free_pages)
+        self._m_spilled = m.counter(
+            "alloc_pages_spilled_host_total",
+            "evicted pages offloaded to the host spill tier")
+        self._m_restored = m.counter(
+            "alloc_pages_restored_host_total",
+            "host-tier pages restored into fresh device pages")
+        m.gauge("alloc_pages_host_tier",
+                "pages resident in the host spill tier",
+                fn=lambda: len(self._host))
         # LIFO free list: freshly freed pages are reused first (their planes
         # are still warm in cache on real hardware)
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
@@ -116,6 +150,8 @@ class PageAllocator:
         #                       generation-tail/partial pages can never hit,
         #                       so they don't dilute prefix_hit_rate
         self.evictions = 0    # cached pages reclaimed under pressure
+        self.host_spills = 0     # evicted pages whose content moved to host
+        self.host_restores = 0   # host-tier pages brought back on a hit
 
     # ------------------------------------------------------------- queries
     @property
@@ -137,6 +173,10 @@ class PageAllocator:
     def pages_needed(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 0) // self.page_size)
 
+    def refcount(self, page: int) -> int:
+        """Live references to `page` (0 = free or cached-evictable)."""
+        return self._ref.get(page, 0)
+
     def match_prefix(self, hashes: Sequence[bytes]) -> int:
         """Longest resident prefix: how many leading `hashes` the index
         holds. Pure query — pins nothing."""
@@ -147,23 +187,61 @@ class PageAllocator:
             n += 1
         return n
 
+    def _classify_prefix(self, hashes: Sequence[bytes],
+                         n_pages: int) -> List[str]:
+        """Leading run of `hashes` servable WITHOUT prefill: each entry is
+        ``"resident"`` (a shared physical page) or ``"host"`` (content in
+        the spill tier — needs a fresh page plus a queued restore); the run
+        stops at the first hash in neither tier."""
+        kinds: List[str] = []
+        for h in list(hashes)[:n_pages]:
+            if h in self._index:
+                kinds.append("resident")
+            elif h in self._host:
+                kinds.append("host")
+            else:
+                break
+        return kinds
+
     def _admission(self, n_pages: int,
-                   hashes: Sequence[bytes]) -> Tuple[int, bool]:
-        """(matched prefix length, whether the request fits) — the single
+                   hashes: Sequence[bytes]) -> Tuple[List[str], bool]:
+        """(prefix classification, whether the request fits) — the single
         source of the budget arithmetic `can_alloc` and `alloc` share, so
         can_alloc() == True structurally guarantees alloc() succeeds. Only
-        the UNCACHED page count charges the reclaimable supply; matched
-        pages sitting in the LRU are pinned by the alloc, not spent."""
-        matched = min(self.match_prefix(hashes), n_pages)
-        pinned_from_lru = sum(1 for h in list(hashes)[:matched]
-                              if self._index[h] in self._lru)
-        return matched, n_pages - matched <= self.free_pages - pinned_from_lru
+        pages drawn fresh (privates + host-tier restores) charge the
+        reclaimable supply; resident matched pages sitting in the LRU are
+        pinned by the alloc, not spent."""
+        kinds = self._classify_prefix(hashes, n_pages)
+        hl = list(hashes)
+        resident = sum(1 for k in kinds if k == "resident")
+        pinned_from_lru = sum(1 for i, k in enumerate(kinds)
+                              if k == "resident" and self._index[hl[i]] in self._lru)
+        return kinds, n_pages - resident <= self.free_pages - pinned_from_lru
 
     def can_alloc(self, n_pages: int, hashes: Sequence[bytes] = ()) -> bool:
         """True iff `alloc(rid, n_pages, hashes)` would succeed."""
         return self._admission(n_pages, hashes)[1]
 
     # ------------------------------------------------------------ mutation
+    def _reclaim_coldest(self) -> int:
+        """Evict the least-recently-released cached page, spilling its
+        content to the host tier first when one is configured (the tier's
+        own LRU drops ITS oldest entry past capacity — that is the true end
+        of the page lifecycle: device -> host -> gone)."""
+        p, h = self._lru.popitem(last=False)
+        if self.host_spill_pages > 0 and self.spill_fn is not None:
+            self._host[h] = self.spill_fn(p)
+            self._host.move_to_end(h)
+            self.host_spills += 1
+            self._m_spilled.inc()
+            while len(self._host) > self.host_spill_pages:
+                self._host.popitem(last=False)
+        del self._index[h]
+        del self._hash[p]
+        self.evictions += 1
+        self._m_evicted.inc()
+        return p
+
     def alloc(self, rid: int, n_pages: int,
               hashes: Sequence[bytes] = ()) -> Tuple[List[int], int]:
         """Reserve `n_pages` for request `rid`, shared-prefix pages first:
@@ -177,34 +255,51 @@ class PageAllocator:
         `match_prefix` rerun) to place their first insert position."""
         if rid in self._owned:
             raise ValueError(f"request {rid} already holds pages")
-        matched, fits = self._admission(n_pages, hashes)
+        kinds, fits = self._admission(n_pages, hashes)
         if not fits:
             raise RuntimeError(
                 f"page pool exhausted: need {n_pages}, free {self.free_pages}")
-        pages: List[int] = []
-        for h in list(hashes)[:matched]:        # pin the shared prefix
-            p = self._index[h]
-            if p in self._lru:
-                del self._lru[p]
-            self._ref[p] = self._ref.get(p, 0) + 1
-            pages.append(p)
-        for _ in range(n_pages - matched):      # private (insert-target)
+        matched = len(kinds)
+        hl = list(hashes)
+        pages: List[int] = [-1] * n_pages
+        # pass 1: pin every RESIDENT shared page, and claim every matched
+        # host-tier content blob, BEFORE drawing any fresh page — drawing
+        # evicts LRU pages (which could be a later resident match) and can
+        # overflow the host tier (which could drop a later host match)
+        restores: Dict[int, object] = {}
+        for i, k in enumerate(kinds):
+            if k == "resident":
+                p = self._index[hl[i]]
+                if p in self._lru:
+                    del self._lru[p]
+                self._ref[p] = self._ref.get(p, 0) + 1
+                pages[i] = p
+            else:                               # host-tier hit
+                restores[i] = self._host.pop(hl[i])
+        # pass 2: fresh pages for host-tier hits (restore queued, hash
+        # re-registered as resident) and for plain privates (insert-target)
+        for i in range(n_pages):
+            if pages[i] >= 0:
+                continue
             if self._free:
                 p = self._free.pop()
             else:                               # reclaim coldest cached page
-                p, h = self._lru.popitem(last=False)
-                del self._index[h]
-                del self._hash[p]
-                self.evictions += 1
-                self._m_evicted.inc()
+                p = self._reclaim_coldest()
             self._ref[p] = 1
-            pages.append(p)
+            pages[i] = p
+            if i in restores:
+                self.pending_restores.append((p, restores[i]))
+                self._index[hl[i]] = p
+                self._hash[p] = hl[i]
+                self.host_restores += 1
+                self._m_restored.inc()
+        n_resident = matched - len(restores)
         self.hits += matched
         self.misses += min(len(hashes), n_pages) - matched
         self._m_hit.inc(matched)
         self._m_miss.inc(min(len(hashes), n_pages) - matched)
-        self._m_alloc_shared.inc(matched)
-        self._m_alloc_private.inc(n_pages - matched)
+        self._m_alloc_shared.inc(n_resident)
+        self._m_alloc_private.inc(n_pages - n_resident)
         self._owned[rid] = pages
         return pages, matched
 
@@ -219,6 +314,10 @@ class PageAllocator:
             raise ValueError(f"request {rid} does not own page {page}")
         if h in self._index or page in self._hash:
             return False
+        # a re-prefilled copy supersedes any host-tier spill of the same
+        # content (equal hashes imply identical bytes) — drop the host copy
+        # so each hash lives in exactly one tier
+        self._host.pop(h, None)
         self._index[h] = page
         self._hash[page] = h
         return True
@@ -236,21 +335,78 @@ class PageAllocator:
                 "allocated)")
         pages = self._owned.pop(rid)
         for p in pages:
-            n = self._ref.get(p, 0)
-            if n <= 0:
-                raise RuntimeError(
-                    f"page {p} released with refcount {n}: allocator state "
-                    "corrupt")
-            if n == 1:
-                del self._ref[p]
-                if p in self._hash:
-                    self._lru[p] = self._hash[p]   # most recently released
-                else:
-                    self._free.append(p)
-            else:
-                self._ref[p] = n - 1
+            self._release_page(p)
         self._m_freed.inc(len(pages))
         return len(pages)
+
+    def _release_page(self, p: int) -> None:
+        """Drop one reference: refcount-0 pages return to the free list, or
+        to the evictable LRU tail when they hold published content."""
+        n = self._ref.get(p, 0)
+        if n <= 0:
+            raise RuntimeError(
+                f"page {p} released with refcount {n}: allocator state "
+                "corrupt")
+        if n == 1:
+            del self._ref[p]
+            if p in self._hash:
+                self._lru[p] = self._hash[p]   # most recently released
+            else:
+                self._free.append(p)
+        else:
+            self._ref[p] = n - 1
+
+    # ---------------------------------------------------------- preemption
+    def preempt(self, rid: int, n_keep: int) -> List[int]:
+        """Release every page `rid` holds PAST its first `n_keep` (the
+        shared prefix stays pinned, keeping its refcounts — the ISSUE's
+        'spilled pages keep refcounts' contract): released refcounts drop
+        exactly like `free`, so published pages move to the evictable LRU
+        and unpublished privates to the free list. The rid keeps its
+        (possibly empty) kept-page list so `resume` can extend it. Returns
+        the released page ids in position order; the ENGINE must snapshot
+        their content (`pool.extract_pages`) BEFORE calling this, because a
+        released page may be reused by the very next alloc."""
+        if rid not in self._owned:
+            raise KeyError(f"preempt of unknown request {rid}")
+        pages = self._owned[rid]
+        n_keep = max(0, min(n_keep, len(pages)))
+        released = pages[n_keep:]
+        self._owned[rid] = pages[:n_keep]
+        for p in released:
+            self._release_page(p)
+        self._m_freed.inc(len(released))
+        return released
+
+    def can_resume(self, rid: int, n_pages: int) -> bool:
+        """True iff `resume(rid, n_pages)` would succeed (kept pages are
+        already pinned, so only the extension charges the supply)."""
+        held = len(self._owned.get(rid, ()))
+        return n_pages - held <= self.free_pages
+
+    def resume(self, rid: int, n_pages: int) -> List[int]:
+        """Extend a preempted request back to `n_pages` total with fresh
+        private pages appended after its kept shared prefix. Returns the
+        NEW page ids in position order; the engine scatters the request's
+        spilled content into them before its next step, after which the
+        request is bit-indistinguishable from one that was never
+        preempted."""
+        if rid not in self._owned:
+            raise KeyError(f"resume of unknown request {rid}")
+        held = self._owned[rid]
+        need = n_pages - len(held)
+        if need > self.free_pages:
+            raise RuntimeError(
+                f"page pool exhausted on resume: need {need}, "
+                f"free {self.free_pages}")
+        new: List[int] = []
+        for _ in range(max(need, 0)):
+            p = self._free.pop() if self._free else self._reclaim_coldest()
+            self._ref[p] = 1
+            new.append(p)
+        held.extend(new)
+        self._m_alloc_private.inc(len(new))
+        return new
 
     def block_table_row(self, rid: int, width: int) -> np.ndarray:
         """[width] int32 row for the device block table (0-padded)."""
@@ -275,10 +431,14 @@ class PageAllocator:
             "prefix_miss_pages": self.misses,
             "prefix_hit_rate": self.hits / looked if looked else 0.0,
             "prefix_evictions": self.evictions,
+            "pages_host_tier": len(self._host),
+            "host_spill_pages_total": self.host_spills,
+            "host_restore_pages_total": self.host_restores,
         }
 
     def reset_stats(self) -> None:
         self.hits = self.misses = self.evictions = 0
+        self.host_spills = self.host_restores = 0
 
     def check_invariants(self) -> None:
         """Structural invariants, used by the property tests: every page is
@@ -300,3 +460,7 @@ class PageAllocator:
         assert self._index == {h: p for p, h in self._hash.items()}, \
             "hash index not a bijection"
         assert set(self._hash) <= (lru | ref), "published hash on free page"
+        assert not (set(self._host) & set(self._index)), \
+            "hash resident on device AND in the host tier"
+        assert len(self._host) <= max(self.host_spill_pages, 0), \
+            "host spill tier over capacity"

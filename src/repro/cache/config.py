@@ -38,6 +38,12 @@ class CacheConfig:
     prefix_cache: bool = True        # share completed prompt pages across
     #                                  requests (paged modes; see
     #                                  docs/paged_cache.md §Prefix caching)
+    host_spill_pages: int = 0        # host-memory spill tier capacity, in
+    #                                  pages (0 = tier off): evicted LRU
+    #                                  pages and preempted requests' private
+    #                                  pages spill here in packed form and
+    #                                  restore bit-exactly (docs/
+    #                                  paged_cache.md §Host spill tier)
 
     def __post_init__(self):
         kind = self.kind.replace("-", "_")
@@ -49,6 +55,8 @@ class CacheConfig:
             raise ValueError("page_size must be >= 1")
         if self.impl not in ("ref", "pallas", "pallas_interpret"):
             raise ValueError(f"unknown paged-attention impl {self.impl!r}")
+        if self.host_spill_pages < 0:
+            raise ValueError("host_spill_pages must be >= 0")
 
     @property
     def paged(self) -> bool:

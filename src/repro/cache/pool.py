@@ -32,6 +32,7 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.formats import AMSFormat, get_scheme
 from repro.core.kv_quant import (
@@ -162,6 +163,50 @@ def gather_kv(pool: Dict, block_table: jnp.ndarray, hd: int,
                 dequantize_kv(v_pl, hd, scheme, dtype))
     return (gather_pages(pool["k"], block_table).astype(dtype),
             gather_pages(pool["v"], block_table).astype(dtype))
+
+
+# -------------------------------------------------------------- host spill
+# Every pool plane is [..., P, page, kv, last] — exactly 4 trailing dims
+# (bf16 k/v, or the AMS hi/lsb/scale planes), with one optional leading
+# layer-group dim from `models.make_cache`. The page axis is therefore
+# always ``ndim - 4``, which lets the spill helpers address pages across
+# the WHOLE cache pytree without knowing the model's layer grouping.
+
+def _page_index(leaf, ids):
+    return (slice(None),) * (leaf.ndim - 4) + (ids,)
+
+
+def extract_pages(cache, page_ids):
+    """Copy the addressed pool pages of every plane to HOST memory, in the
+    pool's storage layout — AMS pages stay PACKED (hi/lsb/scale planes),
+    never dequantized, so a later `restore_pages` is bit-exact by
+    construction. Returns a numpy pytree mirroring ``cache`` with the page
+    axis narrowed to ``len(page_ids)``. This is the preemption/eviction
+    spill path: one device->host transfer per plane, sized to the spilled
+    pages only (never the whole pool)."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    return jax.tree.map(
+        lambda leaf: np.asarray(jnp.take(leaf, ids, axis=leaf.ndim - 4)),
+        cache)
+
+
+def restore_pages(cache, page_ids, host):
+    """Write a `extract_pages` snapshot back into the pool at (possibly
+    different) ``page_ids``: one scatter per plane, byte-identical content.
+    The restored pages are bit-indistinguishable from the originals — for
+    AMS pools the packed planes round-trip exactly, so a resumed request's
+    attention reads the same lattice values it would have read
+    uninterrupted."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    return jax.tree.map(
+        lambda leaf, val: leaf.at[_page_index(leaf, ids)].set(
+            jnp.asarray(val, leaf.dtype)),
+        cache, host)
+
+
+def host_bytes(host) -> int:
+    """Host-tier bytes a spilled-page pytree occupies (accounting)."""
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(host))
 
 
 # -------------------------------------------------------------- accounting

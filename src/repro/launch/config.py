@@ -1,0 +1,207 @@
+"""EngineConfig: the one constructor surface of the serving engine.
+
+`ServeEngine` accreted ~18 loose keyword arguments across PRs 1-9 — cache
+geometry, chunking, speculation, observability, mesh, sampling seeds — that
+no stable client could program against. `EngineConfig` collapses them into
+ONE frozen dataclass that composes the per-subsystem configs that already
+existed (`repro.cache.CacheConfig`, `repro.obs.ObsConfig`, a serving mesh)
+plus the engine-level scalars (slots/capacity/chunking/speculation), and
+carries EVERY constructor-time validation in `__post_init__` so a bad
+config fails in one place with one error surface, before any device work.
+
+    from repro.serving import EngineConfig, ServeEngine
+
+    cfg = EngineConfig(arch="qwen2-7b", scheme="fp5.33-e2m3",
+                       slots=4, capacity=64,
+                       cache=CacheConfig(kind="paged_ams"))
+    eng = ServeEngine(cfg)
+
+The legacy keyword constructor (``ServeEngine("qwen2-7b", slots=4, ...)``)
+still works through `EngineConfig.from_legacy` — a deprecation shim pinned
+(tests/test_engine_api.py) to produce an engine with an IDENTICAL
+`engine_step_signature` and bit-identical token streams.
+
+Derived values the engine used to compute inline (`step_chunk`, the
+resolved per-tick token budget, the sized CacheConfig) are properties /
+methods here, so the engine and the tests share one source of truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Optional
+
+from repro.cache import CacheConfig
+from repro.obs import ObsConfig
+
+# the legacy ServeEngine keyword surface from_legacy still accepts; kept
+# explicit so an unknown kwarg fails loudly instead of being swallowed
+LEGACY_KWARGS = (
+    "reduced", "scheme", "strategy", "impl", "mesh_kind", "mesh", "slots",
+    "capacity", "max_queue", "cache_config", "prefill_chunk", "token_budget",
+    "speculate_k", "drafter", "obs", "seed", "verbose", "preempt",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Everything a `ServeEngine` needs, in one frozen value.
+
+    Model / weights:
+      arch        config name from `repro.configs` (e.g. "qwen2-7b")
+      reduced     use the reduced (test-size) variant of the config
+      scheme      weight quantization scheme ("fp16" = no weight quant)
+      strategy    mantissa-sharing strategy for weight quantization
+      impl        matmul/attention lowering: ref | fused_ref | pallas |
+                  pallas_interpret
+      seed        PRNG seed for (random-init) serving params
+
+    Capacity / scheduling:
+      slots        concurrent sequences in the jitted step
+      capacity     per-sequence cache positions (prompt + generated - 1)
+      max_queue    pending-queue bound; submit raises past it (HTTP 429)
+      prefill_chunk  ragged multi-token prefill: up to C prompt tokens per
+                  slot per tick (1 = one-position-per-tick step)
+      token_budget  global per-tick token cap (None = slots * step_chunk)
+      preempt      allow priority preemption: a strictly-higher-priority
+                  queue head may evict a running lower-priority request,
+                  spilling its private KV pages to the host tier (paged
+                  modes; see docs/serving.md §Preemption)
+
+    Composed subsystem configs:
+      cache       `repro.cache.CacheConfig` (None = contiguous default);
+                  sized to (slots, capacity) by `sized_cache()`
+      obs         `repro.obs.ObsConfig` telemetry switchboard
+      mesh        explicit serving mesh with a "model" axis (tensor-
+                  parallel); None = the `mesh_kind` driver mesh
+      mesh_kind   driver-mesh shape name when `mesh` is None
+
+    Speculative decoding:
+      speculate_k  score up to k draft tokens per decode round (0 = off)
+      drafter      drafter name ("ngram" | "self" | "self-full") or a
+                  `repro.launch.speculative.Drafter` instance
+
+    verbose       print quantization timing at construction
+    """
+
+    arch: str = "qwen2-7b"
+    reduced: bool = True
+    scheme: str = "fp5.33-e2m3"
+    strategy: str = "set_lsb"
+    impl: str = "ref"
+    seed: int = 0
+
+    slots: int = 4
+    capacity: int = 128
+    max_queue: Optional[int] = None
+    prefill_chunk: int = 1
+    token_budget: Optional[int] = None
+    preempt: bool = True
+
+    cache: Optional[CacheConfig] = None
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
+    mesh: Any = None
+    mesh_kind: str = "none"
+
+    speculate_k: int = 0
+    drafter: Any = "ngram"
+
+    verbose: bool = False
+
+    # ------------------------------------------------------------ validation
+    def __post_init__(self):
+        # the ONE constructor-time error surface: every check the engine
+        # used to scatter through __init__ lives here (and only here)
+        if not self.arch or not isinstance(self.arch, str):
+            raise ValueError(f"arch must be a config name, got {self.arch!r}")
+        from repro.configs import get_config, list_archs
+        try:
+            get_config(self.arch)
+        except KeyError:
+            raise ValueError(
+                f"unknown arch {self.arch!r}; one of "
+                f"{list_archs(assigned_only=False)}") from None
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.speculate_k < 0:
+            raise ValueError(
+                f"speculate_k must be >= 0, got {self.speculate_k}")
+        if self.token_budget is not None and self.token_budget < 1:
+            raise ValueError(
+                f"token_budget must be >= 1, got {self.token_budget}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(
+                f"max_queue must be >= 1 (or None = unbounded), "
+                f"got {self.max_queue}")
+        if self.mesh is not None and "model" not in self.mesh.axis_names:
+            raise ValueError("ServeEngine mesh needs a 'model' axis")
+        if self.cache is not None and not isinstance(self.cache, CacheConfig):
+            raise TypeError(
+                f"cache must be a CacheConfig, got {type(self.cache).__name__}")
+        if not isinstance(self.obs, ObsConfig):
+            raise TypeError(
+                f"obs must be an ObsConfig, got {type(self.obs).__name__}")
+
+    # --------------------------------------------------------------- derived
+    @property
+    def step_chunk(self) -> int:
+        """Token-buffer width of the jitted step: the prefill chunk, widened
+        to hold 1 fed token + k drafts per slot when speculating."""
+        if self.speculate_k:
+            return max(self.prefill_chunk, self.speculate_k + 1)
+        return self.prefill_chunk
+
+    @property
+    def resolved_token_budget(self) -> int:
+        """The per-tick token budget actually enforced (default: no
+        throttling — every slot can fill its chunk)."""
+        if self.token_budget is not None:
+            return self.token_budget
+        return self.slots * self.step_chunk
+
+    def sized_cache(self) -> CacheConfig:
+        """The CacheConfig the engine runs: the composed one (or the
+        contiguous default), with derived pool sizes filled from
+        (slots, capacity) for paged modes."""
+        ccfg = self.cache if self.cache is not None else CacheConfig()
+        if ccfg.paged:
+            ccfg = ccfg.sized(capacity=self.capacity, slots=self.slots)
+        return ccfg
+
+    def replace(self, **changes) -> "EngineConfig":
+        return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------------ legacy shim
+    @classmethod
+    def from_legacy(cls, arch: Optional[str] = None, *,
+                    _warn: bool = True, **kwargs) -> "EngineConfig":
+        """Build an EngineConfig from the pre-redesign ``ServeEngine(arch,
+        **kwargs)`` keyword surface. Deprecated: new code passes an
+        EngineConfig. Pinned to produce an identical
+        `engine_step_signature` (tests/test_engine_api.py)."""
+        unknown = set(kwargs) - set(LEGACY_KWARGS)
+        if unknown:
+            raise TypeError(
+                f"unknown ServeEngine argument(s) {sorted(unknown)}; "
+                f"see repro.launch.config.EngineConfig")
+        if _warn:
+            warnings.warn(
+                "ServeEngine(arch, **kwargs) is deprecated; pass "
+                "ServeEngine(EngineConfig(...)) — see repro.serving",
+                DeprecationWarning, stacklevel=3)
+        if "cache_config" in kwargs:
+            kwargs["cache"] = kwargs.pop("cache_config")
+        fields = {}
+        if arch is not None:
+            fields["arch"] = arch
+        for k, v in kwargs.items():
+            if v is None and k in ("obs",):
+                continue                      # keep the dataclass default
+            fields[k] = v
+        return cls(**fields)

@@ -16,11 +16,24 @@ Architecture (Orca-style iteration-level scheduling):
     quantized once at insert). Each slot holds one request with its own
     position counter (`decode_step` takes [B] per-slot positions;
     negative = idle slot, cache write suppressed);
-  * a FIFO scheduler (`launch.scheduler`) admits queued requests into freed
-    slots; admission is capacity-checked at submit time (contiguous) or
-    gated on the free-PAGE budget at admit time (paged — short requests
-    reserve only their own pages, not worst-case slots), so nothing is
-    ever preempted mid-flight;
+  * a priority scheduler (`launch.scheduler`; all-default priorities =
+    strict FIFO) admits queued requests into freed slots; admission is
+    capacity-checked at submit time (contiguous) or gated on the free-PAGE
+    budget at admit time (paged — short requests reserve only their own
+    pages, not worst-case slots);
+  * PREEMPTION (paged modes, ``EngineConfig.preempt``): when the queue
+    head outranks the lowest-priority active request and cannot admit, the
+    engine preempts that victim — its private pages' content spills to
+    host memory in the pool's PACKED layout (`cache.pool.extract_pages`;
+    AMS planes byte-exact), its shared prefix pages stay pinned
+    (refcounts held), and it re-queues ahead of its priority class. On
+    re-admission the engine restores the spilled pages into fresh device
+    pages and resumes feeding at the exact spilled position — never
+    re-prefilling — so preempted streams are bit-identical to
+    uninterrupted ones (seeded draws fold only (rid, token index), never
+    slot or tick). Below eviction sits the optional host spill tier
+    (`CacheConfig.host_spill_pages`): LRU-evicted published pages offload
+    host-side and restore on a later prefix hit instead of re-prefilling;
   * completed PROMPT pages are PREFIX-CACHED across requests (paged modes,
     on by default; ``CacheConfig(prefix_cache=False)`` disables): each full
     prompt page is content-addressed by a prefix-chain hash, and a request
@@ -89,20 +102,30 @@ identical whether it runs alone or packed against arbitrary neighbours —
 ``launch.serve.generate`` path. (MoE configs are the exception: capacity-
 based expert routing couples tokens across the batch.)
 
-Quickstart::
+Quickstart (the stable facade is `repro.serving`)::
 
-    eng = ServeEngine("qwen2-7b", reduced=True, scheme="fp5.33-e2m3",
-                      slots=4, capacity=64)
-    req = eng.submit(np.array([1, 2, 3]), max_tokens=16)
-    eng.run()
-    print(req.tokens)
+    from repro.serving import EngineConfig, ServeEngine
+
+    eng = ServeEngine(EngineConfig(arch="qwen2-7b", scheme="fp5.33-e2m3",
+                                   slots=4, capacity=64))
+    handle = eng.submit(np.array([1, 2, 3]), max_tokens=16)
+    print(handle.result())
+
+The legacy keyword constructor (``ServeEngine("qwen2-7b", slots=4, ...)``)
+still works via `EngineConfig.from_legacy` with a DeprecationWarning, and
+is pinned to an identical `engine_step_signature`. The driver loop can be
+a plain ``eng.run()``, a per-handle ``handle.result()``, or the asyncio
+HTTP/SSE front end (`repro.launch.frontend`) which overlaps host-side
+request intake/streaming with the device step via `step_begin`/`step_end`.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
+import threading
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -112,11 +135,15 @@ from repro.cache import (
     CacheConfig,
     PageAllocator,
     compression_vs_bf16,
+    extract_pages,
+    host_bytes,
     prefix_page_hashes,
+    restore_pages,
 )
 from repro.configs import get_config
 from repro.configs.base import RunConfig
 from repro.core.policy import QuantPolicy
+from repro.launch.config import EngineConfig
 from repro.launch.mesh import make_driver_mesh, use_mesh
 from repro.launch.sampling import (
     GREEDY,
@@ -126,7 +153,15 @@ from repro.launch.sampling import (
     request_key,
     slot_batch,
 )
-from repro.launch.scheduler import FIFOScheduler, Request
+from repro.launch.scheduler import (
+    DECODE,
+    FINISHED,
+    PREEMPTED,
+    PREFILL,
+    FIFOScheduler,
+    Request,
+    SpilledState,
+)
 from repro.launch.steps import build_engine_step, engine_step_signature
 from repro.models import init_params, make_cache, model_dims, reset_cache_slot
 from repro.models.common import quantize_params
@@ -134,59 +169,154 @@ from repro.obs import MetricsRegistry, ObsConfig, TraceRecorder, build_cost_mode
 from repro.obs.metrics import COUNT_BUCKETS, NULL_REGISTRY, TIME_BUCKETS
 
 
+class RequestHandle:
+    """Client-facing view of a submitted request — the ONLY object
+    `ServeEngine.submit` returns. It exposes the stable read surface
+    (`.status`, `.tokens_so_far()`, `.result()`, async `.stream()`) and
+    transparently forwards every other attribute read to the underlying
+    `Request` record, so existing code that inspected `.tokens`, `.done`,
+    `.ttft_ticks`, ... keeps working while new code never touches Request
+    internals."""
+
+    __slots__ = ("_req", "_eng")
+
+    def __init__(self, req: Request, engine: "ServeEngine"):
+        object.__setattr__(self, "_req", req)
+        object.__setattr__(self, "_eng", engine)
+
+    @property
+    def request(self) -> Request:
+        """The underlying scheduler record (escape hatch; internals)."""
+        return self._req
+
+    @property
+    def status(self) -> str:
+        """Lifecycle: queued -> prefill -> decode -> finished, with
+        preempted as the spilled-out detour (scheduler.REQUEST_STATUSES)."""
+        return self._req.status
+
+    @property
+    def done(self) -> bool:
+        return self._req.done
+
+    def tokens_so_far(self) -> List[int]:
+        """Snapshot of the tokens generated so far (a copy)."""
+        return list(self._req.tokens)
+
+    def result(self, max_ticks: int = 1_000_000) -> List[int]:
+        """Block until this request finishes and return its full token
+        list. When no driver loop is running this drives the engine
+        itself; when one is (``engine.driver_active``, e.g. the async
+        frontend), it waits on the engine's tick signal instead."""
+        eng, req = self._eng, self._req
+        for _ in range(max_ticks):
+            if req.done:
+                break
+            if eng.driver_active:
+                eng.wait_tick(eng.tick)
+            elif eng.has_work:
+                eng.step()
+            else:          # pragma: no cover - submitted but queue dropped
+                break
+        return list(req.tokens)
+
+    async def stream(self):
+        """Async token stream (the SSE feed): yields each generated token
+        id as it lands, finishing when the request does. Drives the engine
+        from a worker thread when no driver loop is active; otherwise
+        waits on the engine's tick signal so any number of streams ride
+        one driver."""
+        import asyncio
+        eng, req = self._eng, self._req
+        sent = 0
+        while True:
+            while sent < len(req.tokens):
+                tok = int(req.tokens[sent])
+                sent += 1
+                yield tok
+            if req.done:
+                return
+            if eng.driver_active:
+                await asyncio.to_thread(eng.wait_tick, eng.tick)
+            else:
+                await asyncio.to_thread(eng.step)
+
+    def __getattr__(self, name):
+        return getattr(self._req, name)
+
+    def __repr__(self):
+        r = self._req
+        return (f"RequestHandle(rid={r.rid}, status={r.status!r}, "
+                f"tokens={len(r.tokens)})")
+
+
+@dataclasses.dataclass
+class _PendingStep:
+    """In-flight device step between `step_begin` and `step_end` (the
+    double-buffering seam: the host is free while the device computes)."""
+
+    outs: Any                 # un-awaited step outputs (async dispatch)
+    nvalid: np.ndarray
+    ndraft: np.ndarray
+    t0: float
+    fed: int
+    tracing: bool
+    idle: bool = False
+    result: Optional[Dict[str, object]] = None   # idle ticks resolve early
+
+
 class ServeEngine:
     """Slot-based continuous-batching engine (see module docstring)."""
 
-    def __init__(self, arch: str, *, reduced: bool = True,
-                 scheme: str = "fp5.33-e2m3", strategy: str = "set_lsb",
-                 impl: str = "ref", mesh_kind: str = "none", mesh=None,
-                 slots: int = 4, capacity: int = 128, max_queue: Optional[int] = None,
-                 cache_config: Optional[CacheConfig] = None,
-                 prefill_chunk: int = 1, token_budget: Optional[int] = None,
-                 speculate_k: int = 0, drafter="ngram",
-                 obs: Optional[ObsConfig] = None,
-                 seed: int = 0, params=None, verbose: bool = False):
-        cfg = get_config(arch)
-        if reduced:
+    def __init__(self, config: Any = None, *, params=None, **legacy):
+        # THE constructor surface is one frozen EngineConfig (every
+        # validation already ran in its __post_init__ — the single error
+        # surface). The pre-redesign keyword form ServeEngine(arch,
+        # slots=..., ...) routes through the from_legacy deprecation shim,
+        # pinned to an identical engine_step_signature. `params` stays a
+        # direct argument: it is runtime state (weights), not config.
+        if isinstance(config, EngineConfig):
+            if legacy:
+                raise TypeError(
+                    f"ServeEngine(EngineConfig, ...) takes no extra "
+                    f"keyword arguments, got {sorted(legacy)}")
+            ec = config
+        else:                     # legacy: positional arch string (or None)
+            ec = EngineConfig.from_legacy(config, **legacy)
+        self.config = ec
+        cfg = get_config(ec.arch)
+        if ec.reduced:
             cfg = cfg.reduced()
         self.cfg = cfg
-        self.scheme = scheme
-        self.slots = slots
-        self.capacity = capacity
-        if prefill_chunk < 1:
-            raise ValueError("prefill_chunk must be >= 1")
-        self.chunk = prefill_chunk   # chunk support is gated by
+        scheme = self.scheme = ec.scheme
+        slots = self.slots = ec.slots
+        capacity = self.capacity = ec.capacity
+        self.chunk = ec.prefill_chunk   # chunk support is gated by
         #                              build_engine_step(check_chunked_support)
-        if speculate_k < 0:
-            raise ValueError("speculate_k must be >= 0")
-        self.speculate_k = speculate_k
+        self.speculate_k = ec.speculate_k
         # the jitted step's chunk width must hold 1 fed token + k drafts
         # per slot; prefill growth stays capped at prefill_chunk
-        self.step_chunk = (max(self.chunk, speculate_k + 1) if speculate_k
-                           else self.chunk)
+        self.step_chunk = ec.step_chunk
         # per-tick token budget: every active slot is guaranteed 1; prefill
         # chunks and draft blocks grow only into the leftover. Default = no
         # throttling.
-        self.token_budget = (token_budget if token_budget is not None
-                             else slots * self.step_chunk)
-        if self.token_budget < 1:
-            raise ValueError("token_budget must be >= 1")
-        ccfg = cache_config or CacheConfig()
-        if ccfg.paged:
-            ccfg = ccfg.sized(capacity=capacity, slots=slots)
-        self.cache_cfg = ccfg
+        self.token_budget = ec.resolved_token_budget
+        ccfg = self.cache_cfg = ec.sized_cache()
+        # preemption needs pages to spill — contiguous caches run the
+        # PR 1-9 no-preemption policy regardless of the flag
+        self.preempt_enabled = bool(ec.preempt and ccfg.paged)
         # observability (repro.obs): one registry per engine, resolved to
         # the shared no-op instruments when disabled — recording can never
         # perturb the measured system (bench --obs-check asserts 0% drift)
-        self.obs = obs if obs is not None else ObsConfig()
+        self.obs = ec.obs
         self.metrics = (MetricsRegistry() if self.obs.enabled
                         else NULL_REGISTRY)
         self.trace = TraceRecorder(enabled=self.obs.trace_on)
         self.trace.thread(0, "engine")
         quant = None
         if scheme != "fp16":
-            quant = QuantPolicy(scheme=scheme, strategy=strategy, impl=impl,
-                                min_elements=1 << 10)
+            quant = QuantPolicy(scheme=scheme, strategy=ec.strategy,
+                                impl=ec.impl, min_elements=1 << 10)
         self.rcfg = RunConfig(model=cfg, seq_len=capacity, global_batch=slots,
                               mode="decode", quant=quant)
         # tensor-parallel serving: pass an explicit mesh (e.g.
@@ -195,9 +325,9 @@ class ServeEngine:
         # head-sharded over the model axis, token streams bit-identical to
         # the single-device engine. Default: the mesh_kind driver mesh
         # (1x1 for "none").
-        if mesh is not None and "model" not in mesh.axis_names:
-            raise ValueError("ServeEngine mesh needs a 'model' axis")
-        self.mesh = mesh if mesh is not None else make_driver_mesh(mesh_kind)
+        self.mesh = ec.mesh if ec.mesh is not None \
+            else make_driver_mesh(ec.mesh_kind)
+        seed, drafter, verbose = ec.seed, ec.drafter, ec.verbose
 
         with use_mesh(self.mesh):
             tp = self.mesh.shape["model"]
@@ -209,7 +339,7 @@ class ServeEngine:
                 t0 = time.time()
                 params = quantize_params(params, quant)
                 if verbose:
-                    print(f"[ptq] quantized to {scheme} ({strategy}) "
+                    print(f"[ptq] quantized to {ec.scheme} ({ec.strategy}) "
                           f"in {time.time()-t0:.1f}s", flush=True)
             self.params = params
             # the CacheConfig threads through for contiguous caches too:
@@ -227,10 +357,14 @@ class ServeEngine:
             # arg shapes are kept for obs.cost.hlo_step_cost: lowering the
             # jitted step at its serving shapes yields the compiled
             # program's achieved per-tick HBM/FLOP cost
-            self._step, self._step_shapes, _ = build_engine_step(
+            self._step, self._step_shapes, _shardings = build_engine_step(
                 self.mesh, cfg, self.rcfg, cache_cfg=ccfg,
                 chunk=self.step_chunk, sampling=True,
                 speculate_k=self.speculate_k)
+            # host->device spill restores happen OUTSIDE the jitted step;
+            # on a tp>1 mesh the restored cache must be re-placed to the
+            # step's expected sharding before the next dispatch
+            self._cache_sharding = _shardings.get("cache")
             # the drafter proposes from the (possibly quantized) serving
             # params — resolved here so "self" binds the engine's own stack
             self.drafter = None
@@ -254,7 +388,12 @@ class ServeEngine:
         # host-side slot state
         if ccfg.paged:
             self.alloc: Optional[PageAllocator] = PageAllocator(
-                ccfg.num_pages, ccfg.page_size, metrics=self.metrics)
+                ccfg.num_pages, ccfg.page_size, metrics=self.metrics,
+                host_spill_pages=ccfg.host_spill_pages)
+            # the eviction-spill hook: reads the CURRENT cache pytree at
+            # eviction time (self.cache rebinds functionally every tick)
+            self.alloc.spill_fn = \
+                lambda page: extract_pages(self.cache, [page])
             self.block_tables = np.zeros(
                 (slots, ccfg.max_pages_per_seq), np.int32)
             # a request can never outgrow its block-table row or the pool
@@ -263,7 +402,7 @@ class ServeEngine:
             self.alloc = None
             self.block_tables = None
             eff_cap = capacity
-        self.sched = FIFOScheduler(eff_cap, max_queue=max_queue,
+        self.sched = FIFOScheduler(eff_cap, max_queue=ec.max_queue,
                                    metrics=self.metrics)
         self.active: List[Optional[Request]] = [None] * slots
         self.fed = np.zeros(slots, np.int32)   # inputs consumed == insert pos
@@ -274,6 +413,21 @@ class ServeEngine:
         self.tick = 0
         self.finished: List[Request] = []
         self._rid = itertools.count()
+        # preemption accounting (plain ints: real state, registry-
+        # independent, like PageAllocator.hits)
+        self.preemptions = 0       # requests preempted (spilled out)
+        self.resumes = 0           # preempted requests re-admitted
+        self.spill_pages = 0       # pages whose content spilled host-side
+        self.spill_bytes = 0       # host bytes those spills occupied
+        # double-buffered dispatch seam: at most ONE device step in flight
+        self._pending: Optional[_PendingStep] = None
+        # tick signal for concurrent waiters (RequestHandle.result/stream
+        # under an external driver loop, e.g. the async frontend)
+        self._tick_cv = threading.Condition()
+        self.driver_active = False
+        # serializes frontend-thread submit() against the driver thread's
+        # admission/preemption pass (RLock: _admit -> preempt -> requeue)
+        self._queue_lock = threading.RLock()
 
         # --- telemetry instruments, resolved ONCE (recording on the tick
         # path is then a plain float add; all of stats() derives from
@@ -311,6 +465,19 @@ class ServeEngine:
                                    "prompt positions admitted")
         self._m_cached = m.counter("serve_cached_prompt_tokens_total",
                                    "prompt positions served from shared pages")
+        self._m_preempt = m.counter("serve_preemptions_total",
+                                    "requests preempted (pages spilled)")
+        self._m_resume = m.counter("serve_resumes_total",
+                                   "preempted requests re-admitted")
+        self._m_spill_pages = m.counter(
+            "serve_spill_pages_total",
+            "private pages spilled host-side at preemption")
+        self._m_restore_pages = m.counter(
+            "serve_restore_pages_total",
+            "spilled pages restored into fresh device pages")
+        self._m_spill_bytes = m.counter(
+            "serve_spill_bytes_total",
+            "host bytes occupied by preemption spills")
         self._m_spec_prop = m.counter("serve_spec_proposed_total",
                                       "draft tokens scored by the step")
         self._m_spec_acc = m.counter("serve_spec_accepted_total",
@@ -362,15 +529,21 @@ class ServeEngine:
     # ------------------------------------------------------------- frontend
     def submit(self, prompt, max_tokens: Optional[int] = None,
                prefix_embeds=None,
-               sampling: Optional[SamplingParams] = None) -> Request:
-        """Enqueue a request. Raises if it can never fit a cache slot.
-        (`Request.__post_init__` normalizes the prompt to [P] int32.)
+               sampling: Optional[SamplingParams] = None,
+               priority: int = 0) -> RequestHandle:
+        """Enqueue a request and return its `RequestHandle` (`.status`,
+        `.tokens_so_far()`, `.result()`, async `.stream()`). Raises if it
+        can never fit a cache slot. (`Request.__post_init__` normalizes
+        the prompt to [P] int32.)
 
         ``sampling`` configures the per-request draw (temperature/top_k/
         top_p/seed) and termination (stop_token_ids + max_tokens); omitted
         -> greedy argmax, exactly the PR 1-4 behaviour. ``max_tokens`` is
         the length CAP — ``sampling.max_tokens`` wins when both are given,
-        and a stop-token hit ends the stream earlier."""
+        and a stop-token hit ends the stream earlier. ``priority`` (higher
+        = more urgent, default 0) orders the queue and — paged modes with
+        ``EngineConfig.preempt`` — lets a blocked high-priority head spill
+        a lower-priority active request out to host memory."""
         sp = sampling if sampling is not None else GREEDY
         if sp.max_tokens is not None:
             max_tokens = sp.max_tokens
@@ -388,30 +561,36 @@ class ServeEngine:
                 raise ValueError(
                     f"prefix_embeds must be [n, d_model={self.cfg.d_model}], "
                     f"got {prefix_embeds.shape}")
-        rid = next(self._rid)
-        # request-level PRNG key: seed + REQUEST id (never the slot/tick),
-        # so seeded streams replay across restarts and slot reassignment
-        req = Request(rid=rid, prompt=prompt, max_tokens=max_tokens,
-                      prefix_embeds=prefix_embeds, sampling=sp,
-                      key_data=request_key(sp.seed, rid))
-        ccfg = self.cache_cfg
-        if ccfg.paged and ccfg.prefix_cache and prefix_embeds is None:
-            # chain hash per FULL prompt page — the prefix-cache identity
-            # (modality prefixes are request-local floats, not hashable
-            # token pages, so VLM/audio requests skip the cache)
-            req.page_hashes = prefix_page_hashes(
-                req.prompt, ccfg.page_size, ccfg.content_key)
-        self.sched.submit(req, self.tick)     # raises on backpressure
-        if self.trace.enabled:
-            # one trace thread per request (tid 0 is the engine): the
-            # request span opens here and closes at finish; "queued" runs
-            # until admission
-            self.trace.thread(rid + 1, f"req {rid}")
-            self.trace.begin(rid + 1, "request",
-                             args={"prompt_len": req.prompt_len,
-                                   "max_tokens": max_tokens})
-            self.trace.begin(rid + 1, "queued")
-        return req
+        # the queue lock serializes frontend-thread submissions against the
+        # driver thread's admission pass (heap push vs pop)
+        with self._queue_lock:
+            rid = next(self._rid)
+            # request-level PRNG key: seed + REQUEST id (never the
+            # slot/tick), so seeded streams replay across restarts and
+            # slot reassignment
+            req = Request(rid=rid, prompt=prompt, max_tokens=max_tokens,
+                          prefix_embeds=prefix_embeds, sampling=sp,
+                          key_data=request_key(sp.seed, rid),
+                          priority=priority)
+            ccfg = self.cache_cfg
+            if ccfg.paged and ccfg.prefix_cache and prefix_embeds is None:
+                # chain hash per FULL prompt page — the prefix-cache
+                # identity (modality prefixes are request-local floats, not
+                # hashable token pages, so VLM/audio requests skip the
+                # cache)
+                req.page_hashes = prefix_page_hashes(
+                    req.prompt, ccfg.page_size, ccfg.content_key)
+            self.sched.submit(req, self.tick)     # raises on backpressure
+            if self.trace.enabled:
+                # one trace thread per request (tid 0 is the engine): the
+                # request span opens here and closes at finish; "queued"
+                # runs until admission
+                self.trace.thread(rid + 1, f"req {rid}")
+                self.trace.begin(rid + 1, "request",
+                                 args={"prompt_len": req.prompt_len,
+                                       "max_tokens": max_tokens})
+                self.trace.begin(rid + 1, "queued")
+        return RequestHandle(req, self)
 
     @property
     def has_work(self) -> bool:
@@ -436,10 +615,19 @@ class ServeEngine:
         Called at tick START and AGAIN after slots free at tick end, so an
         early-terminating (stop-token) request's capacity becomes an
         admission the same tick it finishes.
+
+        PREEMPTION POLICY (paged + `EngineConfig.preempt`): after normal
+        admission, while the queue head STRICTLY outranks the lowest-
+        priority active request and remains blocked, that victim (ties:
+        latest admitted) is preempted — spilled host-side and requeued —
+        and admission re-runs. Strictness means a requeued request can
+        never evict its own priority class, so there is no ping-pong.
         """
+        with self._queue_lock:
+            return self._admit_locked()
+
+    def _admit_locked(self) -> int:
         paged = self.cache_cfg.paged
-        free = [s for s, r in enumerate(self.active) if r is None]
-        room = self.token_budget - self.active_count
         fits = None
         if paged:
             ps = self.cache_cfg.page_size
@@ -453,6 +641,14 @@ class ServeEngine:
             # tick both pins cached pages and evicts cold ones.
             def fits(r):
                 need = self.alloc.pages_needed(r.kv_need)
+                if r.spill is not None:
+                    # resume: the kept shared prefix is still pinned, so
+                    # only the extension charges the budget; the spilled
+                    # content is restored right after placement
+                    if not self.alloc.can_resume(r.rid, need):
+                        return False
+                    r.pages = r.pages + self.alloc.resume(r.rid, need)
+                    return True
                 # always re-feed at least the last prompt token (its
                 # logits produce the first generated token), so the
                 # matchable prefix stops one position short of the end
@@ -464,28 +660,157 @@ class ServeEngine:
                 r.cached_len = shared * ps
                 r.published = shared
                 return True
-        placed = self.sched.admit(free, self.tick, fits=fits,
-                                  max_admit=max(0, room))
+
+        def admit_now():
+            free = [s for s, r in enumerate(self.active) if r is None]
+            room = self.token_budget - self.active_count
+            return self.sched.admit(free, self.tick, fits=fits,
+                                    max_admit=max(0, room))
+
+        n = self._place(admit_now())
+        if self.preempt_enabled:
+            while True:
+                head = self.sched.head
+                if head is None:
+                    break
+                victims = [(r.priority, -r.admit_tick, s)
+                           for s, r in enumerate(self.active)
+                           if r is not None]
+                if not victims:
+                    break
+                pri, _, victim_slot = min(victims)
+                if head.priority <= pri:
+                    break      # strict: equals never evict each other
+                self.preempt(victim_slot)
+                n += self._place(admit_now())
+        return n
+
+    def _place(self, placed) -> int:
+        """Per-request placement bookkeeping for `sched.admit` results:
+        block-table row / slot reset, trace span flip, sampling-row fill,
+        and — for resumed requests — the spilled-state restore."""
+        paged = self.cache_cfg.paged
+        if paged and self.alloc.pending_restores:
+            # host-tier prefix hits: admission matched hashes whose pages
+            # were evicted to host memory; scatter their packed content
+            # back into the fresh pages before any of them is read
+            pr, self.alloc.pending_restores = self.alloc.pending_restores, []
+            ids = [p for p, _ in pr]
+            host = jax.tree.map(
+                lambda *ls: np.concatenate(ls, axis=ls[0].ndim - 4),
+                *[c for _, c in pr])
+            self.cache = restore_pages(self.cache, ids, host)
+            if self.mesh.shape["model"] > 1 \
+                    and self._cache_sharding is not None:
+                self.cache = jax.device_put(self.cache, self._cache_sharding)
+            self._m_restore_pages.inc(len(ids))
         for slot, req in placed:
+            resumed = req.spill is not None
             if paged:
                 self.block_tables[slot] = self.alloc.block_table_row(
                     req.rid, self.block_tables.shape[1])
-                self._m_cached.inc(req.cached_len)
+                if not resumed:
+                    self._m_cached.inc(req.cached_len)
             else:
                 self.cache = self._reset(self.cache, slot)
-            self._m_prompt.inc(req.n_prefix + req.prompt_len)
+            if not resumed:
+                self._m_prompt.inc(req.n_prefix + req.prompt_len)
             if self.trace.enabled:
-                self.trace.end(req.rid + 1, "queued",
+                self.trace.end(req.rid + 1,
+                               "preempted" if resumed else "queued",
                                args={"slot": slot,
                                      "cached_len": req.cached_len})
-                self.trace.begin(req.rid + 1, "prefill")
+                self.trace.begin(req.rid + 1,
+                                 "decode" if (resumed and req.tokens)
+                                 else "prefill")
             self.active[slot] = req
             # prefill skip: cached pages already hold positions
             # [0, cached_len), so this slot starts feeding there
             self.fed[slot] = req.cached_len
             fill_slot(self.samp, slot, req.sampling, req.key_data,
                       req.max_tokens)
+            req.status = PREFILL
+            if resumed:
+                self._restore_slot(slot, req)
         return len(placed)
+
+    def _restore_slot(self, slot: int, req: Request) -> None:
+        """Scatter a resumed request's spilled page content into its fresh
+        pages and rewind slot state to the exact spilled position. The
+        restored planes are byte-identical (packed AMS round trip) and the
+        sampling key folds only (rid, token index) with ``ngen`` restored
+        below, so the continued stream is bit-identical to one that was
+        never preempted — and nothing is ever re-prefilled."""
+        sp = req.spill
+        if sp.n_pages:
+            new_pages = req.pages[sp.n_keep:sp.n_keep + sp.n_pages]
+            self.cache = restore_pages(self.cache, new_pages, sp.content)
+            if self.mesh.shape["model"] > 1 \
+                    and self._cache_sharding is not None:
+                # outside-jit scatters can drop the head-sharded layout;
+                # re-place so the next dispatch sees its expected sharding
+                self.cache = jax.device_put(self.cache, self._cache_sharding)
+            self._m_restore_pages.inc(sp.n_pages)
+        self.fed[slot] = sp.fed
+        self.last_token[slot] = sp.last_token
+        self.samp["ngen"][slot] = req.n_generated
+        # re-publish restored prompt pages from the kept-prefix boundary:
+        # publish() is a no-op wherever the original page is still resident
+        req.published = sp.n_keep
+        req.status = DECODE if req.tokens else PREFILL
+        req.spill = None
+        self.resumes += 1
+        self._m_resume.inc()
+
+    def preempt(self, slot: int) -> Request:
+        """Preempt the request in `slot`: snapshot its private pages'
+        content host-side (packed planes — `cache.pool.extract_pages`),
+        release those pages (shared prefix stays pinned), clear the slot,
+        and requeue the request ahead of its priority class. Public so
+        tests can force preemption at arbitrary stream positions; the
+        engine's own policy calls this from `_admit`."""
+        req = self.active[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is idle")
+        if not self.cache_cfg.paged:
+            raise RuntimeError("preemption requires a paged cache")
+        ps = self.cache_cfg.page_size
+        fed = int(self.fed[slot])
+        n_keep = req.cached_len // ps            # shared prefix: pinned
+        n_touched = -(-fed // ps)                # pages holding content
+        spill_ids = req.pages[n_keep:n_touched]
+        content = extract_pages(self.cache, spill_ids) if spill_ids else None
+        nbytes = host_bytes(content) if spill_ids else 0
+        # snapshot BEFORE release: a released page may be reused by the
+        # very next alloc
+        self.alloc.preempt(req.rid, n_keep)
+        req.pages = req.pages[:n_keep]
+        req.spill = SpilledState(
+            fed=fed, last_token=int(self.last_token[slot]), content=content,
+            n_pages=len(spill_ids), n_keep=n_keep, nbytes=nbytes)
+        req.preemptions += 1
+        req.status = PREEMPTED
+        req.slot = -1
+        self.active[slot] = None
+        clear_slot(self.samp, slot)
+        self.block_tables[slot] = 0
+        self.fed[slot] = 0
+        self.last_token[slot] = 0
+        self.preemptions += 1
+        self.spill_pages += len(spill_ids)
+        self.spill_bytes += nbytes
+        self._m_preempt.inc()
+        self._m_spill_pages.inc(len(spill_ids))
+        self._m_spill_bytes.inc(nbytes)
+        if self.trace.enabled:
+            self.trace.end(req.rid + 1,
+                           "decode" if req.tokens else "prefill")
+            self.trace.begin(req.rid + 1, "preempted",
+                             args={"spill_pages": len(spill_ids),
+                                   "fed": fed})
+        with self._queue_lock:
+            self.sched.requeue(req)
+        return req
 
     # ----------------------------------------------------------------- tick
     def step(self) -> Dict[str, object]:
@@ -493,7 +818,23 @@ class ServeEngine:
         slots by their consumed chunk lengths.
 
         Returns {"finished": [Request], "generated": int, "active": int}.
+        Exactly ``step_end(step_begin())`` — the split form is the
+        double-buffering seam async drivers use (host free between the two
+        halves while the device computes).
         """
+        return self.step_end(self.step_begin())
+
+    def step_begin(self) -> _PendingStep:
+        """First half of a tick: admission (+ preemption policy), chunk
+        sizing, ragged input build, and the ASYNC dispatch of the jitted
+        step. Returns the in-flight handle `step_end` consumes; raises if a
+        step is already in flight. Between `step_begin` and `step_end` the
+        host thread is free — the async frontend parks the engine thread
+        there so its event loop serves HTTP/SSE/submissions under the
+        device compute of tick t (work for tick t+1 lands in the queue
+        before t's `step_end` runs its same-tick re-admit)."""
+        if self._pending is not None:
+            raise RuntimeError("step already in flight (step_end not called)")
         t0 = time.perf_counter()
         paged = self.cache_cfg.paged
         C = self.step_chunk              # token-buffer width fed to the step
@@ -515,7 +856,12 @@ class ServeEngine:
                 self._m_idle.inc()
                 if tracing:
                     self.trace.end(0, "tick", args={"idle": True})
-                return {"finished": [], "generated": 0, "active": 0}
+                with self._tick_cv:
+                    self._tick_cv.notify_all()
+                return _PendingStep(
+                    outs=None, nvalid=None, ndraft=None, t0=t0, fed=0,
+                    tracing=tracing, idle=True,
+                    result={"finished": [], "generated": 0, "active": 0})
             self._m_active.set(self.active_count)
 
             # 2) size each slot's chunk under the global token budget:
@@ -621,7 +967,29 @@ class ServeEngine:
                 self.trace.begin(0, "device_step",
                                  args={"tokens_fed": fed,
                                        "active": self.active_count})
-            outs = self._step(*args)
+            outs = self._step(*args)     # async dispatch: the device is
+            #                              now computing; nothing below in
+            #                              step_end blocks until np.asarray
+        p = _PendingStep(outs=outs, nvalid=nvalid, ndraft=ndraft,
+                         t0=t0, fed=fed, tracing=tracing)
+        self._pending = p
+        return p
+
+    def step_end(self, pending: Optional[_PendingStep] = None) -> Dict[str, object]:
+        """Second half of a tick: block on the in-flight device step,
+        advance slot state by consumed chunk lengths, publish pages,
+        finish / roll back speculation / same-tick re-admit. Accepts the
+        handle from `step_begin` (or uses the stored one)."""
+        p = self._pending if pending is None else pending
+        if p is None:
+            raise RuntimeError("no step in flight (call step_begin first)")
+        self._pending = None
+        if p.idle:
+            return p.result
+        t0, tracing, fed = p.t0, p.tracing, p.fed
+        nvalid, ndraft, outs = p.nvalid, p.ndraft, p.outs
+        paged = self.cache_cfg.paged
+        with use_mesh(self.mesh):
             if tracing:
                 # time the device work to completion — dispatch is
                 # serialized under tracing, so trace runs are for
@@ -707,12 +1075,14 @@ class ServeEngine:
                     self._m_emit.inc()
                     if was_first:
                         req.first_token_tick = self.tick
+                        req.status = DECODE
                         if tracing:
                             self.trace.end(req.rid + 1, "prefill")
                             self.trace.begin(req.rid + 1, "decode")
                     if bool(done[s]):
                         # in-step termination: stop-token hit or length cap
                         req.finish_tick = self.tick
+                        req.status = FINISHED
                         req.finish_reason = (
                             "stop" if tok in req.sampling.stop_token_ids
                             else "length")
@@ -773,8 +1143,19 @@ class ServeEngine:
             self.trace.counter("engine", {"active": self.active_count,
                                           "queue": self.sched.queue_depth})
             self.trace.end(0, "tick", args={"generated": generated})
+        with self._tick_cv:
+            self._tick_cv.notify_all()
         return {"finished": finished, "generated": generated,
                 "active": self.active_count}
+
+    def wait_tick(self, tick: int, timeout: float = 0.5) -> None:
+        """Block until the engine clock passes `tick` (RequestHandle
+        waiters use this when an external driver owns `step()`); the
+        timeout bounds the wait in case that driver stops mid-flight."""
+        with self._tick_cv:
+            self._tick_cv.wait_for(
+                lambda: self.tick > tick or not self.driver_active,
+                timeout=timeout)
 
     # ------------------------------------------------------------------ run
     def run(self, max_ticks: int = 1_000_000) -> Dict[str, float]:
@@ -792,6 +1173,8 @@ class ServeEngine:
         without touching in-flight requests or the cache. Registry
         registrations (and callback gauges) survive — only values zero."""
         self.finished = []
+        self.preemptions = self.resumes = 0
+        self.spill_pages = self.spill_bytes = 0
         self.metrics.reset()
         if self.alloc is not None:
             self.alloc.reset_stats()
@@ -897,6 +1280,12 @@ class ServeEngine:
             "accept_rate": spec_acc / spec_prop if spec_prop else 0.0,
             "tokens_per_step": (float(tok.sum()) / emit_rounds
                                 if emit_rounds else 0.0),
+            # preemption / host-spill tier (plain ints: real even with
+            # ObsConfig(enabled=False), like the allocator's hit counters)
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "spill_pages": self.spill_pages,
+            "spill_bytes": self.spill_bytes,
         }
         if self.alloc is not None:
             out["free_pages"] = self.alloc.free_pages

@@ -1,36 +1,72 @@
 """Request queue + slot admission for the continuous-batching engine.
 
-The scheduler owns the *host-side* half of serving state: a FIFO queue of
-pending requests and the mapping of requests into free slots of the fixed-
-capacity KV cache. Admission is capacity-safe by construction — a request is
-only accepted at submit time if its full footprint (prefix embeddings +
-prompt + generated tokens) fits one cache slot, so the engine never has to
-preempt or re-admit mid-flight.
+The scheduler owns the *host-side* half of serving state: a priority queue
+of pending requests and the mapping of requests into free slots of the
+fixed-capacity KV cache. Admission is capacity-safe by construction — a
+request is only accepted at submit time if its full footprint (prefix
+embeddings + prompt + generated tokens) fits one cache slot.
 
-Policy is deliberately the simplest thing that is production-shaped: strict
-FIFO admission into any free slot (no reordering, no priority tiers). For
-the paged KV cache the engine passes ``admit(..., fits=...)`` — the
+Policy: priority classes over strict arrival order. Every request carries
+an integer ``priority`` (higher = more urgent, default 0); the queue is
+ordered by (priority desc, arrival order asc), so an all-default workload
+degenerates to EXACTLY the strict FIFO of PRs 1–9 (pinned by the existing
+engine tests). A preempted request re-enters via ``requeue`` AHEAD of every
+waiting request of its priority class (it already consumed service, and it
+holds spilled state that should drain quickly), but still behind any
+strictly-higher class.
+
+For the paged KV cache the engine passes ``admit(..., fits=...)`` — the
 CACHE-AWARE free-page budget check: it matches the request's prompt-page
 hashes against the allocator's prefix index (longest resident prefix) and
 charges only the UNCACHED page count against the free budget, so a request
-whose prompt is mostly cached admits even under page pressure. Strict FIFO
-is preserved by head-of-line blocking (a queued request that doesn't fit
-stops admission rather than being jumped). Because ``fits`` returning True
-guarantees admission, the engine's check allocates pages directly — the
-matched prefix is pinned (refcount += 1) and recorded as ``cached_len`` so
-the engine can skip prefilling it.
+whose prompt is mostly cached admits even under page pressure. Queue order
+is preserved by head-of-line blocking (a queue head that doesn't fit stops
+admission rather than being jumped); under the engine's preemption policy
+(`EngineConfig.preempt`) a blocked head of strictly higher priority
+triggers victim preemption in the ENGINE, which spills the victim's pages
+host-side and calls ``requeue`` — the scheduler itself never touches device
+state. Because ``fits`` returning True guarantees admission, the engine's
+check allocates pages directly — the matched prefix is pinned
+(refcount += 1) and recorded as ``cached_len`` so the engine can skip
+prefilling it.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Callable, Deque, List, Optional, Tuple
+import heapq
+from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
 
 from repro.launch.sampling import GREEDY, SamplingParams
 from repro.obs.metrics import NULL_REGISTRY
+
+# Request.status lifecycle values (RequestHandle.status re-exports these):
+#   queued -> prefill -> decode -> finished
+#                 \______ preempted ______/   (back via requeue -> prefill)
+QUEUED = "queued"
+PREFILL = "prefill"
+DECODE = "decode"
+PREEMPTED = "preempted"
+FINISHED = "finished"
+REQUEST_STATUSES = (QUEUED, PREFILL, DECODE, PREEMPTED, FINISHED)
+
+
+@dataclasses.dataclass
+class SpilledState:
+    """Host-side snapshot of a preempted request's in-flight state: exactly
+    what the engine needs to resume it bit-identically — the device resume
+    point, the next input token, and the released pages' content in the
+    pool's PACKED storage layout (`cache.pool.extract_pages`), so AMS
+    planes round-trip byte-exactly."""
+
+    fed: int                 # cache positions already inserted (resume point)
+    last_token: int          # next input token id to feed at position `fed`
+    content: Any             # extract_pages pytree of the released pages
+    n_pages: int             # released page count (page axis of `content`)
+    n_keep: int              # shared-prefix pages that stayed pinned
+    nbytes: int = 0          # host bytes the snapshot occupies (accounting)
 
 
 @dataclasses.dataclass
@@ -46,6 +82,8 @@ class Request:
     key_data: Optional[np.ndarray] = None  # uint32[2] request-level PRNG key
     #                                        (fold_in(PRNGKey(seed), rid);
     #                                        engine-filled at submit)
+    priority: int = 0                     # higher = more urgent; default 0
+    #                                       everywhere = strict FIFO
 
     # lifecycle, filled by the scheduler/engine (tick = engine step index).
     # admit_tick can precede the first served tick by one: a slot freed by
@@ -60,8 +98,13 @@ class Request:
     finish_tick: int = -1
     finish_reason: str = ""               # "stop" (EOS/stop id) | "length"
     slot: int = -1
+    status: str = QUEUED                  # lifecycle (REQUEST_STATUSES)
     tokens: List[int] = dataclasses.field(default_factory=list)
     pages: List[int] = dataclasses.field(default_factory=list)  # paged mode
+
+    # preemption (engine-filled; paged modes only):
+    preemptions: int = 0                  # times this request was preempted
+    spill: Optional[SpilledState] = None  # host snapshot while PREEMPTED
 
     # speculative decoding accounting (engine-filled; see launch.speculative)
     drafted: int = 0           # draft tokens scored for this request
@@ -147,18 +190,26 @@ class Request:
 
 
 class FIFOScheduler:
-    """Strict-FIFO admission into free KV-cache slots.
+    """Priority admission into free KV-cache slots — (priority desc,
+    arrival asc) order, which with all-default priorities is EXACTLY the
+    strict FIFO this class shipped as in PRs 1–9 (hence the name).
 
     ``capacity`` is the per-slot sequence capacity of the engine's KV cache;
     ``max_queue`` (optional) bounds the pending queue — past it, ``submit``
-    raises, which is the backpressure signal a frontend would surface as 429.
+    raises, which is the backpressure signal the frontend surfaces as 429.
     """
 
     def __init__(self, capacity: int, max_queue: Optional[int] = None,
                  metrics=None):
         self.capacity = capacity
         self.max_queue = max_queue
-        self._queue: Deque[Request] = deque()
+        # min-heap of (-priority, order, Request): order is a monotonic
+        # submit counter, so equal priorities pop in arrival order; requeued
+        # (preempted) requests take DECREASING negative orders, so they pop
+        # ahead of every waiting request of their class
+        self._queue: List[Tuple[int, int, Request]] = []
+        self._order = 0
+        self._rorder = 0
         # telemetry (repro.obs): the engine passes its registry; a bare
         # scheduler gets the shared no-op instruments
         m = metrics if metrics is not None else NULL_REGISTRY
@@ -172,6 +223,9 @@ class FIFOScheduler:
         self._m_blocked = m.counter(
             "sched_admit_blocked_total",
             "head-of-line blocks: the queue head failed the fits() gate")
+        self._m_requeued = m.counter(
+            "sched_requests_requeued_total",
+            "preempted requests returned to the queue head")
 
     def submit(self, req: Request, tick: int) -> Request:
         if req.max_tokens < 1:
@@ -189,9 +243,30 @@ class FIFOScheduler:
             raise RuntimeError(
                 f"queue full ({self.max_queue}); request {req.rid} rejected")
         req.submit_tick = tick
-        self._queue.append(req)
+        req.status = QUEUED
+        self._order += 1
+        heapq.heappush(self._queue, (-req.priority, self._order, req))
         self._m_submitted.inc()
         return req
+
+    def requeue(self, req: Request) -> Request:
+        """Return a PREEMPTED request to the queue, ahead of every waiting
+        request of its priority class (it already consumed service and
+        holds spilled pages that should drain) but behind any strictly
+        higher class. Not subject to ``max_queue`` — rejecting a request
+        we already accepted and part-served is not backpressure, it is
+        data loss."""
+        self._rorder -= 1
+        heapq.heappush(self._queue, (-req.priority, self._rorder, req))
+        self._m_requeued.inc()
+        return req
+
+    @property
+    def head(self) -> Optional[Request]:
+        """The request `admit` would place next (None when idle) — the
+        engine's preemption policy compares its priority against the
+        active slots'."""
+        return self._queue[0][2] if self._queue else None
 
     def admit(self, free_slots: List[int], tick: int,
               fits: Optional[Callable[[Request], bool]] = None,
@@ -220,10 +295,10 @@ class FIFOScheduler:
                 break
             if max_admit is not None and len(placed) >= max_admit:
                 break
-            if fits is not None and not fits(self._queue[0]):
+            if fits is not None and not fits(self._queue[0][2]):
                 self._m_blocked.inc()
                 break
-            req = self._queue.popleft()
+            req = heapq.heappop(self._queue)[2]
             req.admit_tick = tick
             req.slot = slot
             placed.append((slot, req))

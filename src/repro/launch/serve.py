@@ -27,6 +27,7 @@ import argparse
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.config import EngineConfig
 from repro.launch.engine import ServeEngine
 
 
@@ -60,9 +61,11 @@ def generate(arch: str, *, reduced=True, scheme="fp5.33-e2m3",
         prefix_embeds = rng.standard_normal(
             (batch, cfg.num_prefix_embeds, cfg.d_model)).astype(np.float32)
 
-    eng = ServeEngine(arch, reduced=reduced, scheme=scheme, strategy=strategy,
-                      impl=impl, mesh_kind=mesh_kind, slots=batch,
-                      capacity=cap, seed=seed, params=params, verbose=True)
+    eng = ServeEngine(
+        EngineConfig(arch=arch, reduced=reduced, scheme=scheme,
+                     strategy=strategy, impl=impl, mesh_kind=mesh_kind,
+                     slots=batch, capacity=cap, seed=seed, verbose=True),
+        params=params)
     per_req = (sampling if isinstance(sampling, (list, tuple))
                else [sampling] * prompts.shape[0])
     reqs = [eng.submit(prompts[b], gen_tokens,

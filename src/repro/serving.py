@@ -1,0 +1,35 @@
+"""Stable serving facade — the supported import surface for users.
+
+    from repro.serving import EngineConfig, ServeEngine, SamplingParams
+
+    eng = ServeEngine(EngineConfig(cache=CacheConfig(kind="paged_ams")))
+    handle = eng.submit(prompt_ids, max_tokens=64, priority=1)
+    tokens = handle.result()            # or: async for t in handle.stream()
+
+Everything re-exported here is covered by the API tests
+(tests/test_engine_api.py); internals under ``repro.launch.*`` and
+``repro.cache.*`` may move between releases, these names will not.
+"""
+
+from __future__ import annotations
+
+from repro.cache.config import CacheConfig
+from repro.launch.config import EngineConfig
+from repro.launch.engine import RequestHandle, ServeEngine
+from repro.launch.frontend import ServeFrontend, serve
+from repro.launch.sampling import SamplingParams
+from repro.launch.scheduler import Request, SpilledState
+from repro.obs import ObsConfig
+
+__all__ = [
+    "CacheConfig",
+    "EngineConfig",
+    "ObsConfig",
+    "Request",
+    "RequestHandle",
+    "SamplingParams",
+    "ServeEngine",
+    "ServeFrontend",
+    "SpilledState",
+    "serve",
+]

@@ -11,8 +11,8 @@ capacity-full FIFO queuing.
 import numpy as np
 import pytest
 
-from repro.launch.engine import ServeEngine
 from repro.launch.serve import generate
+from repro.serving import EngineConfig, ServeEngine
 
 ARCH = "qwen2-7b"
 SCHEME = "fp5.33-e2m3"
@@ -37,7 +37,7 @@ def test_continuous_matches_one_shot(mixed_requests):
     """3 concurrent requests, different lengths AND arrival ticks, on 2 slots
     (the third queues) — exact match against per-request one-shot decoding."""
     prompts, maxtok = mixed_requests
-    eng = ServeEngine(ARCH, scheme=SCHEME, slots=2, capacity=CAP, seed=0)
+    eng = ServeEngine(EngineConfig(arch=ARCH, scheme=SCHEME, slots=2, capacity=CAP))
     arrivals = {0: [0], 2: [1], 7: [2]}
     reqs, tick = [], 0
     while eng.has_work or tick <= max(arrivals):
@@ -60,7 +60,7 @@ def test_slot_reuse_after_completion(mixed_requests):
     """One slot, three queued requests: each admission reuses the slot and
     must be bit-identical to a fresh solo run (stale cache fully isolated)."""
     prompts, maxtok = mixed_requests
-    eng = ServeEngine(ARCH, scheme=SCHEME, slots=1, capacity=CAP, seed=0)
+    eng = ServeEngine(EngineConfig(arch=ARCH, scheme=SCHEME, slots=1, capacity=CAP))
     reqs = [eng.submit(p, m) for p, m in zip(prompts, maxtok)]
     eng.run()
 
@@ -76,7 +76,7 @@ def test_capacity_full_queuing():
     """More requests than slots: the overflow queues (FIFO) and admission
     happens only as slots free up; everything eventually completes."""
     rng = np.random.default_rng(3)
-    eng = ServeEngine(ARCH, scheme=SCHEME, slots=2, capacity=CAP, seed=0)
+    eng = ServeEngine(EngineConfig(arch=ARCH, scheme=SCHEME, slots=2, capacity=CAP))
     reqs = [eng.submit(rng.integers(0, 512, 4 + j), 4) for j in range(4)]
     assert eng.sched.queue_depth == 4
     eng.step()
@@ -95,7 +95,7 @@ def test_capacity_full_queuing():
 
 
 def test_submit_rejects_oversized():
-    eng = ServeEngine(ARCH, scheme=SCHEME, slots=1, capacity=16, seed=0)
+    eng = ServeEngine(EngineConfig(arch=ARCH, scheme=SCHEME, slots=1, capacity=16))
     with pytest.raises(ValueError, match="cache positions"):
         eng.submit(np.arange(10), max_tokens=10)  # needs 19 > 16
     with pytest.raises(ValueError):

@@ -1,0 +1,288 @@
+"""Preemption + host-tier KV spill: the bit-exactness acceptance grid.
+
+The load-bearing property of this subsystem: preempting a running request
+— spilling its private KV pages' PACKED content to host memory, giving the
+pages away, and resuming later into different physical pages — must be
+invisible in the token stream. The grid below forces a mid-stream
+preempt/resume across {paged_bf16, paged_ams} x prefill chunk {1, 4} x
+{greedy, seeded sampling} and requires the continued stream to be
+bit-identical to an uninterrupted run. AMS packed planes (hi/lsb/scale)
+are additionally byte-compared across the spill round trip — quantization
+happens ONCE at insert, so a spill/restore cycle must move bytes, never
+re-quantize.
+
+Below the engine: PageAllocator preempt/resume/host-tier unit tests
+(refcount + invariant checks), shared-prefix refcount preservation across
+preemption, and the host spill tier serving a prefix hit whose pages were
+evicted from the device pool.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.cache import PageAllocator, extract_pages
+from repro.cache.allocator import prefix_page_hashes
+from repro.serving import (
+    CacheConfig,
+    EngineConfig,
+    SamplingParams,
+    ServeEngine,
+)
+
+ARCH = "qwen2-7b"
+SCHEME = "fp5.33-e2m3"
+GREEDY = None
+SEEDED = SamplingParams(temperature=0.8, top_k=16, seed=42)
+
+
+def config(kind: str, chunk: int, **kw) -> EngineConfig:
+    base = dict(arch=ARCH, scheme=SCHEME, slots=2, capacity=48,
+                prefill_chunk=chunk,
+                cache=CacheConfig(kind=kind, page_size=8,
+                                  host_spill_pages=32))
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def tree_equal_bytes(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        x.dtype == y.dtype and np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# =========================================================== acceptance grid
+@pytest.mark.parametrize("kind", ["paged_bf16", "paged_ams"])
+@pytest.mark.parametrize("chunk", [1, 4])
+@pytest.mark.parametrize("sampling", [GREEDY, SEEDED],
+                         ids=["greedy", "seeded"])
+def test_preempt_resume_stream_bit_identical(kind, chunk, sampling):
+    """Force a preemption mid-decode and one mid-prefill: every continued
+    stream must match the uninterrupted reference bit-for-bit."""
+    prompt = (np.arange(1, 14, dtype=np.int32) * 3) % 200 + 1
+    ec = config(kind, chunk)
+    ref = ServeEngine(ec).submit(prompt, max_tokens=10,
+                                 sampling=sampling).result()
+
+    prefill_ticks = -(-len(prompt) // chunk)
+    for ticks_before in (2, prefill_ticks + 3):   # mid-prefill, mid-decode
+        eng = ServeEngine(ec)
+        h = eng.submit(prompt, max_tokens=10, sampling=sampling)
+        for _ in range(ticks_before):
+            eng.step()
+        assert h.status in ("prefill", "decode")
+        eng.preempt(h.request.slot)
+        assert h.status == "preempted"
+        assert h.request.spill is not None
+        out = h.result()
+        assert h.status == "finished"
+        assert out == ref, (
+            f"{kind}/chunk{chunk}: stream diverged after preempt at "
+            f"tick {ticks_before}")
+        s = eng.stats()
+        assert s["preemptions"] == 1 and s["resumes"] == 1
+
+
+def test_ams_planes_byte_exact_across_spill_round_trip():
+    """The spilled AMS planes (packed hi/lsb/scale) must land back in the
+    pool byte-identical — spill moves bytes, it never re-quantizes."""
+    eng = ServeEngine(config("paged_ams", 1))
+    h = eng.submit((np.arange(1, 20, dtype=np.int32) * 7) % 300 + 1,
+                   max_tokens=8)
+    # stop on a PAGE BOUNDARY (fed == 8 == page_size): the spilled page is
+    # complete, so post-resume inserts land in LATER pages and the restored
+    # page must stay byte-frozen through the rest of the stream
+    for _ in range(8):
+        eng.step()
+    req = h.request
+    eng.preempt(req.slot)
+    sp = req.spill
+    assert sp.fed == 8 and sp.n_pages == 1 and sp.nbytes > 0
+    spilled = jax.tree.map(np.copy, sp.content)
+    n_keep = sp.n_keep
+    # churn another request through the freed pages while h resumes
+    other = eng.submit(np.arange(50, 71, dtype=np.int32), max_tokens=4)
+    assert h.result() is not None and other.result() is not None
+    assert req.spill is None and h.status == "finished"
+    restored = extract_pages(
+        eng.cache, req.pages[n_keep:n_keep + sp.n_pages])
+    assert tree_equal_bytes(spilled, restored), (
+        "AMS packed planes changed across the spill round trip")
+
+
+# ======================================================== priority policy e2e
+def test_priority_preemption_end_to_end():
+    """Two low-priority requests saturate both slots; a high-priority
+    arrival must preempt one (latest admitted), run to completion first,
+    and every stream — including the victim's — must match its solo run."""
+    ec = config("paged_ams", 1)
+    long_p = np.arange(1, 11, dtype=np.int32)
+    short_p = np.arange(100, 105, dtype=np.int32)
+    refs = [ServeEngine(ec).submit(p, max_tokens=m).result()
+            for p, m in ((long_p, 16), (long_p + 1, 16), (short_p, 4))]
+
+    eng = ServeEngine(ec)
+    h0 = eng.submit(long_p, max_tokens=16, priority=0)
+    eng.step()          # stagger admit ticks: h1 is the LATER victim
+    h1 = eng.submit(long_p + 1, max_tokens=16, priority=0)
+    for _ in range(5):
+        eng.step()
+    hi = eng.submit(short_p, max_tokens=4, priority=5)
+    eng.step()
+    assert eng.preemptions == 1
+    assert hi.status in ("prefill", "decode")     # admitted immediately
+    victim = h1 if h1.status == "preempted" else h0
+    assert victim is h1, "policy must evict the LATEST-admitted victim"
+    out_hi = hi.result()
+    assert victim.request.preemptions == 1
+    outs = [h0.result(), h1.result(), out_hi]
+    assert outs == refs, "priority moved WHEN requests run, never WHAT"
+    assert hi.request.finish_tick < victim.request.finish_tick
+
+
+def test_equal_priority_never_preempts():
+    """Strictness: an equal-priority head waits (head-of-line FIFO, the
+    PR 1-9 behaviour) — no ping-pong between peers."""
+    ec = config("paged_ams", 1)
+    eng = ServeEngine(ec)
+    eng.submit(np.arange(1, 8, dtype=np.int32), max_tokens=12)
+    eng.submit(np.arange(2, 9, dtype=np.int32), max_tokens=12)
+    for _ in range(3):
+        eng.step()
+    h = eng.submit(np.arange(3, 10, dtype=np.int32), max_tokens=4)
+    eng.run()
+    assert eng.preemptions == 0
+    assert h.done
+
+
+# =========================================================== shared prefixes
+def test_shared_prefix_pages_survive_preemption():
+    """Preemption releases only PRIVATE pages: a victim sharing prefix
+    pages with a live request keeps them pinned (no spill, no refcount
+    drop below the co-owner), and resume never re-prefills them."""
+    ec = config("paged_ams", 1)
+    sys_prompt = np.arange(200, 216, dtype=np.int32)      # two full pages
+    mk = lambda tail: np.concatenate([sys_prompt, tail])
+    a_p, b_p = mk(np.arange(1, 6, dtype=np.int32)), \
+        mk(np.arange(50, 54, dtype=np.int32))
+    refs = [ServeEngine(ec).submit(p, max_tokens=8).result()
+            for p in (a_p, b_p)]
+
+    eng = ServeEngine(ec)
+    ha = eng.submit(a_p, max_tokens=8)
+    while ha.request.published < 2:       # shared pages live in the index
+        eng.step()
+    hb = eng.submit(b_p, max_tokens=8)
+    while hb.status == "queued":
+        eng.step()
+    assert hb.request.cached_len == 16    # prefix served from shared pages
+    shared = list(hb.request.pages[:2])
+    eng.preempt(hb.request.slot)
+    # the victim's KEPT prefix must still be pinned for it
+    assert hb.request.pages == shared
+    assert hb.request.spill.n_keep == 2
+    for p in shared:
+        assert eng.alloc.refcount(p) >= 1
+    outs = [ha.result(), hb.result()]
+    assert outs == refs
+    eng.alloc.check_invariants()
+    assert eng.stats()["cached_token_frac"] > 0
+
+
+# ============================================================ host spill tier
+def test_host_tier_serves_evicted_prefix():
+    """Prefix pages evicted from the device pool under pressure spill to
+    the host tier and come back on a later prefix match — the restored
+    request streams identically and the tier counters move."""
+    cache = CacheConfig(kind="paged_ams", page_size=8, host_spill_pages=16)
+    ec = EngineConfig(arch=ARCH, scheme=SCHEME, slots=1, capacity=32,
+                      cache=cache)
+    prompt = np.arange(300, 317, dtype=np.int32)          # two full pages
+    ref = ServeEngine(ec).submit(prompt, max_tokens=6).result()
+
+    eng = ServeEngine(ec)
+    assert eng.submit(prompt, max_tokens=6).result() == ref
+    # pool is slots*capacity/page_size = 4 pages; churn DISTINCT prompts
+    # through it so the published prefix pages get evicted (and spilled)
+    for j in range(3):
+        eng.submit(np.arange(1 + 40 * j, 18 + 40 * j, dtype=np.int32),
+                   max_tokens=6).result()
+    assert eng.alloc.host_spills >= 2, "prefix pages never reached the tier"
+    h = eng.submit(prompt, max_tokens=6)
+    out = h.result()
+    assert out == ref
+    assert eng.alloc.host_restores >= 2
+    assert h.request.cached_len >= 16     # the hit came from the tier
+    eng.alloc.check_invariants()
+    s = eng.alloc.stats()
+    assert s["host_spill_pages_total"] >= 2
+    assert s["host_restore_pages_total"] >= 2
+
+
+# ========================================================== allocator (unit)
+class TestAllocatorPreemptResume:
+    def _alloc(self, n=8, host=0):
+        return PageAllocator(n, page_size=4, host_spill_pages=host)
+
+    def test_preempt_releases_private_keeps_order(self):
+        a = self._alloc()
+        pages, _ = a.alloc(1, 4, [])
+        released = a.preempt(1, 1)
+        assert released == pages[1:]
+        assert a.free_pages == 7          # 3 back, 1 still pinned
+        assert a.can_resume(1, 4)
+        new = a.resume(1, 4)
+        assert len(new) == 3 and set(new).isdisjoint({pages[0]})
+        a.free(1)
+        assert a.free_pages == 8
+        a.check_invariants()
+
+    def test_preempt_keeps_shared_refcounts(self):
+        a = self._alloc()
+        h = prefix_page_hashes(np.arange(8, dtype=np.int32), 4, "k")
+        p1, _ = a.alloc(1, 3, h)
+        for j in range(2):
+            a.publish(1, h[j], p1[j])
+        p2, matched = a.alloc(2, 3, h)
+        assert matched == 2 and p2[:2] == p1[:2]
+        a.preempt(2, 2)                   # rid 2 keeps the shared prefix
+        assert a.refcount(p1[0]) == 2 and a.refcount(p1[1]) == 2
+        a.resume(2, 3)
+        a.free(1)
+        assert a.refcount(p1[0]) == 1     # rid 2 still pins it
+        a.check_invariants()
+
+    def test_host_tier_spill_and_restore(self):
+        a = self._alloc(n=4, host=8)
+        store = {}
+        a.spill_fn = lambda page: store.setdefault(page, f"content-{page}")
+        h = prefix_page_hashes(np.arange(8, dtype=np.int32), 4, "k")
+        p1, _ = a.alloc(1, 2, h)
+        for j in range(2):
+            a.publish(1, h[j], p1[j])
+        a.free(1)                          # both pages now LRU-evictable
+        a.alloc(2, 4, [])                  # full pool: evicts + spills both
+        assert a.host_spills == 2
+        a.free(2)
+        p3, matched = a.alloc(3, 2, h)     # host hit: fresh pages + restore
+        assert matched == 2
+        assert sorted(p for p, _ in a.pending_restores) == sorted(p3)
+        assert {c for _, c in a.pending_restores} == set(store.values())
+        a.pending_restores.clear()
+        a.check_invariants()
+
+    def test_tier_capacity_evicts_oldest(self):
+        a = self._alloc(n=2, host=1)
+        spilled = []
+        a.spill_fn = lambda page: spilled.append(page) or f"c{page}"
+        h = prefix_page_hashes(np.arange(8, dtype=np.int32), 4, "k")
+        p1, _ = a.alloc(1, 2, h)
+        for j in range(2):
+            a.publish(1, h[j], p1[j])
+        a.free(1)
+        a.alloc(2, 2, [])                  # spills both, tier holds ONE
+        assert a.host_spills == 2
+        assert a.stats()["pages_host_tier"] == 1
+        a.check_invariants()
